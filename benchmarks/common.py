@@ -1,0 +1,56 @@
+"""Shared benchmark helpers: timing, CSV rows, paper constants."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+# Paper reference points (FAMOUS, Alveo U55C @ 400 MHz unless noted)
+PAPER_TABLE1 = [
+    # (SL, d_model, heads, TS, latency_ms, GOPS)
+    (64, 768, 8, 64, 0.94, 328),
+    (64, 768, 4, 64, 1.401, 220),
+    (64, 768, 2, 64, 2.281, 135),
+    (64, 512, 8, 64, 0.597, 184),
+    (64, 256, 8, 64, 0.352, 312),   # paper reports higher GOPS at 256
+    (128, 768, 8, 64, 2.0, 314),
+    (32, 768, 8, 64, 0.534, 285),
+    (16, 768, 8, 64, 13.0, 16),     # paper anomaly row (#8)
+    (64, 768, 8, 32, 1.155, 267),
+    (64, 768, 8, 16, 1.563, 197),
+]
+
+PAPER_TABLE2 = [
+    # platform, topology (SL, d_model, h), GOP, latency_ms, GOPS
+    ("Intel E5 2698v4 CPU", (64, 768, 12), 0.308, 1.1, 280),
+    ("NVIDIA V100 GPU", (64, 512, 4), 0.11, 1.5578, 71),
+    ("Intel Xeon Gold 5220R CPU", (64, 512, 8), 0.11, 1.96, 56),
+    ("NVIDIA P100 GPU", (64, 512, 4), 0.11, 0.496, 221),
+    ("FAMOUS U55C (64,768,8)", (64, 768, 8), 0.308, 0.94, 328),
+    ("FAMOUS U55C (64,512,8)", (64, 512, 8), 0.11, 0.597, 184),
+]
+
+PAPER_TABLE3 = [
+    ("A3 (ASIC 40nm, sparse)", 221),
+    ("Sanger (ASIC 55nm, sparse)", 529),
+    ("SpAtten (ASIC 55nm, sparse)", 360),
+    ("SALO (ASIC 45nm, sparse)", 704),
+    ("FAMOUS (FPGA U55C, dense)", 328),
+]
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time in microseconds of fn(*args) (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

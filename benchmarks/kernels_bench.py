@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: FAMOUS Pallas kernels (interpret mode — CPU
+correctness path) vs their XLA equivalents, plus the analytical VMEM/II
+breakdown per module that a real-TPU run would validate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import analytical, famous
+
+
+def run():
+    print("# kernel-level: XLA path timings (CPU) + per-module analytical "
+          "v5e breakdown")
+    B, SL, D, H = 1, 2048, 1024, 8
+    dh = D // H
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (B, SL, D), jnp.float32)
+    ws = [jax.random.normal(k, (D, H, dh), jnp.float32) * 0.05
+          for k in ks[1:]]
+    cfg = famous.FamousConfig(impl="xla")
+
+    @jax.jit
+    def qkv(x, wq, wk, wv):
+        return famous.qkv_projection(x, wq, wk, wv, cfg=cfg)
+
+    us = common.timeit(qkv, x, *ws)
+    common.emit("kernels/qkv_xla", us, f"tokens={B*SL}")
+
+    q, k, v = qkv(x, *ws)
+
+    @jax.jit
+    def attn(q, k, v):
+        return famous.attention(q, k, v, causal=True, cfg=cfg)
+
+    us = common.timeit(attn, q, k, v)
+    common.emit("kernels/attention_xla_flash", us, "")
+
+    lat = analytical.mha_latency(batch=B, seq=SL, heads=H, kv_heads=H,
+                                 head_dim=dh, d_model=D)
+    for m in lat.modules:
+        common.emit(f"kernels/v5e_pred_{m.name}", m.t_total * 1e6,
+                    f"ii_us={m.ii*1e6:.2f};steps={m.steps};"
+                    f"vmem_kib={m.vmem_bytes/1024:.0f}")
+    tuned = analytical.autotune_tiles(batch=B, seq=SL, heads=H, kv_heads=H,
+                                      head_dim=dh, d_model=D)
+    common.emit("kernels/v5e_autotuned_total",
+                tuned["latency"].total * 1e6, f"tiles={tuned['tiles']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""§Roofline report generator: reads experiments/dryrun/*.json and emits the
+per-(arch × shape × mesh) roofline table (markdown + CSV rows)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+DRYRUN = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load(tag_filter=""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        r = json.load(open(f))
+        if (r.get("tag") or "") != tag_filter:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows) -> str:
+    out = ["| arch | shape | mesh | GiB/dev | t_compute | t_memory | "
+           "t_collective | dominant | useful | roofline frac |",
+           "|---|---|---|---:|---:|---:|---:|---|---:|---:|"]
+    for r in rows:
+        rr = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['memory']['per_device_gib']:.2f} "
+            f"| {rr['t_compute_s']:.3f}s | {rr['t_memory_s']:.3f}s "
+            f"| {rr['t_collective_s']:.3f}s | {rr['dominant']} "
+            f"| {rr['useful_flop_ratio']:.2f} "
+            f"| {rr['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = load()
+    print(f"# Roofline table: {len(rows)} baseline cells")
+    for r in rows:
+        rr = r["roofline"]
+        print(f"roofline/{r['arch']}__{r['shape']}__{r['mesh']},0.0,"
+              f"dom={rr['dominant']};frac={rr['roofline_fraction']:.4f};"
+              f"useful={rr['useful_flop_ratio']:.3f};"
+              f"gib={r['memory']['per_device_gib']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Table I analogue: runtime-programmable parameter sweep.
+
+Sweeps (heads, d_model, SL) at runtime over ONE set of compiled executables
+(the FAMOUS µB story) and TS (= tile sizes) as a "re-synthesis" knob, on the
+paper's BERT-variant topology.  For each point we report:
+  * measured CPU wall time of the MHA block (relative trends only — this
+    container has no TPU),
+  * the analytical model's predicted v5e latency (§VII port) and GOPS,
+  * the paper's measured U55C latency/GOPS where available.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import analytical, famous
+
+
+def _mha(B, SL, D, H, dh, impl, tiles=512):
+    cfg = famous.FamousConfig(impl=impl, tile_q=tiles, tile_k=tiles,
+                              tile_d=tiles)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (B, SL, D), jnp.float32)
+    wq = jax.random.normal(ks[1], (D, H, dh), jnp.float32) * 0.05
+    wk = jax.random.normal(ks[2], (D, H, dh), jnp.float32) * 0.05
+    wv = jax.random.normal(ks[3], (D, H, dh), jnp.float32) * 0.05
+
+    @jax.jit
+    def f(x, wq, wk, wv):
+        q, k, v = famous.qkv_projection(x, wq, wk, wv, cfg=cfg)
+        return famous.attention(q, k, v, causal=False, cfg=cfg)
+
+    return f, (x, wq, wk, wv)
+
+
+def run():
+    print("# Table I analogue: sweep (h, d_model, SL, TS)")
+    print("# paper row: measured U55C ms/GOPS; ours: CPU us (trend) + "
+          "analytical v5e us/GOPS")
+    for (SL, D, H, TS, paper_ms, paper_gops) in common.PAPER_TABLE1:
+        dh = D // H
+        f, args = _mha(1, SL, D, H, dh, "xla")
+        us = common.timeit(f, *args)
+        lat = analytical.mha_latency(batch=1, seq=SL, heads=H, kv_heads=H,
+                                     head_dim=dh, d_model=D,
+                                     tile_q=max(TS, 128), tile_k=max(TS, 128),
+                                     tile_d=max(TS, 128), dtype_bytes=1,
+                                     quant="int8")
+        gop = analytical.paper_gops(seq=SL, d_model=D, heads=H)
+        common.emit(
+            f"table1/SL{SL}_d{D}_h{H}_TS{TS}", us,
+            f"pred_v5e_us={lat.total*1e6:.1f};pred_gops={lat.gops():.0f};"
+            f"paper_ms={paper_ms};paper_gops={paper_gops};gop={gop:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,2 @@
+"""repro: FAMOUS (tiled flexible dense MHA) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

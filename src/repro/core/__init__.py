@@ -1,0 +1,12 @@
+"""FAMOUS core — the paper's contribution as composable JAX modules."""
+from repro.core.famous import (  # noqa: F401
+    FamousConfig,
+    attention,
+    attention_reference,
+    attention_xla,
+    decode_attention,
+    mha_block,
+    qkv_projection,
+    qkv_projection_reference,
+    qkv_projection_xla,
+)

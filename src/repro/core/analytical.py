@@ -1,0 +1,203 @@
+"""Analytical latency model — the paper's §VII (Eq. 3–14) adapted to TPU v5e.
+
+FAMOUS predicts per-module latency with the pipelined-loop model
+
+    PLL = (TC − 1) · II + Pipeline_Depth          (Eq. 3)
+    TL  = PLL · outer trip count                  (Eq. 4)
+
+On a TPU the same structure holds for a ``pallas_call`` grid: the grid is the
+trip count, the initiation interval II of the software-pipelined grid loop is
+``max(tile_compute_time, tile_DMA_time)`` (compute/DMA overlap), and the
+pipeline depth is the first tile's DMA fill.  The per-module equations (Eq.
+5–12: LI/LB/LIA/LWA for loads, SA/S/SV for the three PMs) become per-module
+(FLOPs, HBM bytes, VMEM working set) terms.
+
+The model serves the same two purposes as in the paper:
+  1. predict latency before "synthesis" (here: before compiling / on CPU-only
+     hosts where wall-clock TPU time cannot be measured), validated against
+     XLA ``cost_analysis()`` in ``benchmarks/analytical_validation.py``;
+  2. choose the tile size: ``autotune_tiles`` rejects tilings whose working
+     set exceeds VMEM and picks the II-minimising (block_q, block_k, block_d)
+     — replacing the paper's 36-hour trial synthesis loop per TS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    name: str = "tpu-v5e"
+    peak_bf16: float = 197e12       # FLOP/s
+    peak_int8: float = 394e12       # OP/s
+    hbm_bw: float = 819e9           # B/s
+    ici_bw: float = 50e9            # B/s per link (per direction)
+    hbm_bytes: float = 16 * 2**30
+    vmem_bytes: float = 64 * 2**20  # usable budget (half of 128 MiB)
+    mxu: int = 128                  # systolic dim; tiles should align to this
+    dma_latency: float = 1e-6       # per-transfer fixed cost (PD analogue)
+
+
+V5E = TpuSpec()
+
+
+@dataclasses.dataclass
+class ModuleLatency:
+    """One FAMOUS processing module's predicted cost."""
+
+    name: str
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: float       # per-step working set (must fit VMEM)
+    steps: int              # trip count TC (number of tiles / grid size)
+
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    ii: float = 0.0         # initiation interval
+    t_total: float = 0.0    # (TC-1)*II + PD
+
+    def finalize(self, hw: TpuSpec, peak: float) -> "ModuleLatency":
+        self.t_compute = self.flops / peak
+        self.t_memory = self.hbm_bytes / hw.hbm_bw
+        per_step_c = self.t_compute / max(self.steps, 1)
+        per_step_m = self.t_memory / max(self.steps, 1)
+        self.ii = max(per_step_c, per_step_m)
+        pd = per_step_m + hw.dma_latency  # first-tile DMA fill
+        self.t_total = max(self.steps - 1, 0) * self.ii + pd + per_step_c
+        return self
+
+
+@dataclasses.dataclass
+class MhaLatency:
+    modules: list[ModuleLatency]
+
+    @property
+    def total(self) -> float:            # Eq. 13
+        return sum(m.t_total for m in self.modules)
+
+    @property
+    def flops(self) -> float:
+        return sum(m.flops for m in self.modules)
+
+    @property
+    def hbm_bytes(self) -> float:
+        return sum(m.hbm_bytes for m in self.modules)
+
+    def gops(self) -> float:
+        """Throughput in GOPS as the paper reports (ops = 2*MACs)."""
+        return self.flops / self.total / 1e9
+
+    def table(self) -> str:
+        rows = [f"{'module':<10}{'steps':>7}{'GFLOP':>10}{'MB':>10}"
+                f"{'II(us)':>10}{'t(us)':>10}"]
+        for m in self.modules:
+            rows.append(
+                f"{m.name:<10}{m.steps:>7}{m.flops/1e9:>10.3f}"
+                f"{m.hbm_bytes/1e6:>10.3f}{m.ii*1e6:>10.3f}{m.t_total*1e6:>10.2f}")
+        rows.append(f"{'TOTAL':<10}{'':>7}{self.flops/1e9:>10.3f}"
+                    f"{self.hbm_bytes/1e6:>10.3f}{'':>10}{self.total*1e6:>10.2f}")
+        return "\n".join(rows)
+
+
+def mha_latency(*, batch: int, seq: int, heads: int, kv_heads: int,
+                head_dim: int, d_model: int, tile_q: int = 512,
+                tile_k: int = 512, tile_d: int = 512, dtype_bytes: int = 2,
+                kv_seq: int | None = None, hw: TpuSpec = V5E,
+                quant: str = "none") -> MhaLatency:
+    """Predict FAMOUS MHA latency on TPU for one (B, S, H, dh) problem.
+
+    Mirrors Eq. 5–13: module terms for loading inputs/weights (folded into
+    each module's HBM bytes — on TPU loads are the DMA half of the pipeline,
+    not separate phases) and the three PMs.
+    """
+    kv_seq = kv_seq or seq
+    peak = hw.peak_int8 if quant == "int8" else hw.peak_bf16
+    in_bytes = 1 if quant == "int8" else dtype_bytes
+    tile_q = min(tile_q, seq)
+    tile_k = min(tile_k, kv_seq)
+    tile_d = min(tile_d, d_model)
+    proj = heads * head_dim
+
+    # --- QKV_PM (Alg. 1): X (B,S,D) x W (D, 3*proj_q + 2 uses kv) ----------
+    # Tiling-aware traffic (the mechanism behind Table I tests #9-#10):
+    # with an output-stationary (tile_q x tile_f) accumulation over TS-sized
+    # reduction tiles, X is re-read once per output-column block and W once
+    # per token block — smaller tiles mean more reloads, exactly the FPGA's
+    # "each tile loaded (d_model/TS) times".
+    kv_proj = kv_heads * head_dim
+    w_cols = proj + 2 * kv_proj
+    tile_f = min(tile_k, w_cols)
+    flops = 2.0 * batch * seq * d_model * w_cols
+    n_tiles_d = math.ceil(d_model / tile_d)                     # TS loop
+    n_tiles_f = math.ceil(w_cols / tile_f)
+    n_tiles_t = math.ceil(batch * seq / tile_q)
+    hbm = (in_bytes * batch * seq * d_model * n_tiles_f         # X reloads
+           + in_bytes * d_model * w_cols * n_tiles_t            # W reloads
+           + dtype_bytes * batch * seq * w_cols)                # QKV out once
+    vmem = in_bytes * (tile_q * tile_d + tile_d * tile_f) \
+        + 4 * tile_q * tile_f                                   # f32 acc
+    steps = n_tiles_t * n_tiles_f * n_tiles_d
+    qkv = ModuleLatency("QKV_PM", flops, hbm, vmem, steps).finalize(hw, peak)
+
+    # --- QK_PM (Alg. 2) + softmax ------------------------------------------
+    # Q tile resident; K streams once per q block (flash ordering).
+    n_q = max(1, seq // tile_q)
+    n_k = max(1, kv_seq // tile_k)
+    flops = 2.0 * batch * heads * seq * kv_seq * head_dim
+    softmax_flops = 6.0 * batch * heads * seq * kv_seq          # exp/sum VPU
+    hbm = dtype_bytes * batch * (seq * proj                     # Q once
+                                 + kv_seq * kv_proj * n_q)      # K per q-block
+    vmem = dtype_bytes * (tile_q * head_dim + tile_k * head_dim) \
+        + 4 * tile_q * tile_k
+    steps = n_q * n_k * batch * heads
+    qk = ModuleLatency("QK_PM", flops + softmax_flops, hbm, vmem,
+                       steps).finalize(hw, peak)
+
+    # --- SV_PM (Alg. 3) ------------------------------------------------------
+    flops = 2.0 * batch * heads * seq * kv_seq * head_dim
+    hbm = dtype_bytes * batch * (kv_seq * kv_proj * n_q          # V per q-blk
+                                 + seq * proj)                   # O out
+    vmem = dtype_bytes * (tile_q * tile_k + tile_k * head_dim) \
+        + 4 * tile_q * head_dim
+    steps = n_q * n_k * batch * heads
+    sv = ModuleLatency("SV_PM", flops, hbm, vmem, steps).finalize(hw, peak)
+
+    return MhaLatency([qkv, qk, sv])
+
+
+def fits_vmem(lat: MhaLatency, hw: TpuSpec = V5E) -> bool:
+    # double-buffered DMA: 2x the working set must fit
+    return all(2 * m.vmem_bytes <= hw.vmem_bytes for m in lat.modules)
+
+
+def autotune_tiles(*, batch: int, seq: int, heads: int, kv_heads: int,
+                   head_dim: int, d_model: int, dtype_bytes: int = 2,
+                   hw: TpuSpec = V5E, quant: str = "none",
+                   candidates=(128, 256, 512, 1024, 2048)) -> dict:
+    """Pick (tile_q, tile_k, tile_d) minimising predicted total latency under
+    the VMEM constraint — the paper's TS sweep without the 36 h synthesis."""
+    best = None
+    for tq, tk, td in itertools.product(candidates, repeat=3):
+        if tq % hw.mxu or tk % hw.mxu or td % hw.mxu:
+            continue
+        lat = mha_latency(batch=batch, seq=seq, heads=heads,
+                          kv_heads=kv_heads, head_dim=head_dim,
+                          d_model=d_model, tile_q=tq, tile_k=tk, tile_d=td,
+                          dtype_bytes=dtype_bytes, hw=hw, quant=quant)
+        if not fits_vmem(lat, hw):
+            continue
+        if best is None or lat.total < best[0]:
+            best = (lat.total, dict(tile_q=tq, tile_k=tk, tile_d=td), lat)
+    assert best is not None, "no feasible tiling"
+    return {"tiles": best[1], "latency": best[2]}
+
+
+def paper_gops(*, seq: int, d_model: int, heads: int) -> float:
+    """Operation count (GOP) as the paper counts it: QKV + QK + SV MACs*2."""
+    dh = d_model // heads
+    qkv = 2 * seq * d_model * 3 * d_model
+    qk = 2 * heads * seq * seq * dh
+    sv = 2 * heads * seq * seq * dh
+    return (qkv + qk + sv) / 1e9

@@ -1,0 +1,374 @@
+"""FAMOUS core: flexible, tiled, dense multi-head attention (the paper's
+contribution), adapted from UltraScale+ FPGAs to TPU.
+
+The paper decomposes MHA into three processing modules —
+
+  * ``QKV_PM`` :  Q/K/V = X·W{q,k,v} + B{q,k,v}   (Algorithm 1, column-tiled)
+  * ``QK_PM``  :  S = softmax(Q·Kᵀ / √d_k)        (Algorithm 2 + LUT softmax)
+  * ``SV_PM``  :  A = S·V                          (Algorithm 3)
+
+— each with its own PE-array geometry, with the weight matrices tiled along
+the *reduction* dimension in tiles of size ``TS`` so one tile fits in BRAM.
+
+This module provides three interchangeable implementations of the same math:
+
+  impl="reference"  paper-faithful: explicit TS-tile loop with partial-sum
+                    accumulation (Alg 1) and a fully materialised S matrix
+                    (the FPGA stores S in BRAM; feasible at the paper's SL=64).
+                    This is the reproduction baseline.
+  impl="xla"        TPU-native XLA path: fused projections and an *online*
+                    (running max/sum) softmax over key tiles — identical math,
+                    same tiling structure, but S is never materialised.  Used
+                    by training, serving and the multi-pod dry-run.
+  impl="pallas"     hand-written Pallas TPU kernels (kernels/qkv, kernels/
+                    attention) with BlockSpec VMEM tiling — the TS analogue is
+                    the (block_q, block_k, block_d) triple.  Validated in
+                    interpret mode on CPU; selected on real TPU backends.
+
+GQA extends the paper (which is pure MHA): K/V heads are broadcast to query
+heads inside the QK/SV modules, mirroring how FAMOUS shares K BRAMs across PE
+groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class FamousConfig:
+    """Tiling + dispatch knobs (the TS analogue and runtime maxima)."""
+
+    tile_d: int = 512       # TS for the QKV_PM reduction dim (d_model)
+    tile_q: int = 512       # query-tile rows held on-chip in QK/SV modules
+    tile_k: int = 512       # key-tile columns streamed through QK/SV modules
+    impl: str = "xla"       # reference | xla | pallas
+    quant: str = "none"     # none | int8  (paper uses 8-bit fixed point)
+    # Runtime-programmable maxima (paper §IV-C: h/d_model/SL adjustable below
+    # synthesis-time maxima without re-synthesis).
+    max_heads: int = 0
+    max_seq: int = 0
+    max_d_model: int = 0
+
+
+# ---------------------------------------------------------------------------
+# QKV_PM — Algorithm 1
+# ---------------------------------------------------------------------------
+
+def qkv_projection_reference(x, wq, wk, wv, bq=None, bk=None, bv=None, *,
+                             tile_d: int = 64):
+    """Paper-faithful Algorithm 1: column-tiled projection with accumulation.
+
+    x : (..., S, D); w* : (D, H, dh) — tiled along D (the reduction dim, the
+    one FAMOUS tiles since "the first dimension is already reduced by the
+    number of heads").  Each iteration loads one (TS,)-slice of x and one
+    (TS, H, dh) tile of each weight and accumulates partial products, exactly
+    as the BRAM tiles are swapped and partial sums accumulated on the FPGA.
+    """
+    d = x.shape[-1]
+    tile_d = min(tile_d, d)
+    assert d % tile_d == 0, (d, tile_d)
+    n_tiles = d // tile_d
+
+    def one(w):
+        acc = jnp.zeros(x.shape[:-1] + w.shape[1:], jnp.float32)
+        for t in range(n_tiles):  # the (d_model / TS) BRAM-reload iterations
+            xs = jax.lax.dynamic_slice_in_dim(x, t * tile_d, tile_d, axis=-1)
+            ws = jax.lax.dynamic_slice_in_dim(w, t * tile_d, tile_d, axis=0)
+            acc = acc + jnp.einsum(
+                "...sd,dhe->...she", xs.astype(jnp.float32), ws.astype(jnp.float32)
+            )
+        return acc
+
+    q, k, v = one(wq), one(wk), one(wv)
+    # Bias load is overlapped with compute on the FPGA; added at the end.
+    if bq is not None:
+        q, k, v = q + bq, k + bk, v + bv
+    return q.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype)
+
+
+def qkv_projection_xla(x, wq, wk, wv, bq=None, bk=None, bv=None, *,
+                       quantized: bool = False):
+    """Fused XLA projection (one read of x feeds three matmuls, like the
+    shared X BRAM in QKV_PM).  Optional int8 path = 8-bit fixed point."""
+    if quantized:
+        q = quant_lib.int8_einsum("...sd,dhe->...she", x, wq)
+        k = quant_lib.int8_einsum("...sd,dhe->...she", x, wk)
+        v = quant_lib.int8_einsum("...sd,dhe->...she", x, wv)
+    else:
+        w = jnp.concatenate(
+            [wq.reshape(wq.shape[0], -1), wk.reshape(wk.shape[0], -1),
+             wv.reshape(wv.shape[0], -1)], axis=-1)
+        qkv = jnp.einsum("...sd,df->...sf", x, w.astype(x.dtype))
+        nq = wq.shape[1] * wq.shape[2]
+        nk = wk.shape[1] * wk.shape[2]
+        q = qkv[..., :nq].reshape(x.shape[:-1] + wq.shape[1:])
+        k = qkv[..., nq:nq + nk].reshape(x.shape[:-1] + wk.shape[1:])
+        v = qkv[..., nq + nk:].reshape(x.shape[:-1] + wv.shape[1:])
+    if bq is not None:
+        q, k, v = q + bq.astype(q.dtype), k + bk.astype(k.dtype), v + bv.astype(v.dtype)
+    return q, k, v
+
+
+def qkv_projection(x, wq, wk, wv, bq=None, bk=None, bv=None, *,
+                   cfg: FamousConfig = FamousConfig()):
+    if cfg.impl == "reference":
+        return qkv_projection_reference(x, wq, wk, wv, bq, bk, bv,
+                                        tile_d=cfg.tile_d)
+    if cfg.impl == "pallas":
+        from repro.kernels.qkv import ops as qkv_ops
+        return qkv_ops.qkv_projection(x, wq, wk, wv, bq, bk, bv,
+                                      tile_d=cfg.tile_d, quant=cfg.quant)
+    return qkv_projection_xla(x, wq, wk, wv, bq, bk, bv,
+                              quantized=cfg.quant == "int8")
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int, dtype=jnp.float32):
+    """Additive mask bias (0 / -inf) for (len(q_pos), len(k_pos))."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(dtype)
+
+
+def _broadcast_kv(x, num_q_heads):
+    """GQA: repeat kv heads to match query heads. x: (B, S, KV, dh)."""
+    kv = x.shape[-2]
+    if kv == num_q_heads:
+        return x
+    return jnp.repeat(x, num_q_heads // kv, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# QK_PM + softmax + SV_PM — Algorithms 2 & 3
+# ---------------------------------------------------------------------------
+
+def attention_reference(q, k, v, *, causal=True, window=0, scale=None,
+                        q_offset=0):
+    """Paper-faithful QK_PM/SV_PM: materialise S (the FPGA keeps S in BRAM),
+    full softmax, then S·V.  Fine at the paper's SL=64; the baseline oracle."""
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    k = _broadcast_kv(k, H)
+    v = _broadcast_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)[None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _flash_forward(q, k, v, *, causal, window, scale, q_offset, block_k):
+    """Online-softmax forward over key tiles. q,k,v: (B,S,H,dh), kv already
+    broadcast to H heads. Returns (out (B,Sq,H,dh), lse (B,H,Sq))."""
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    nkb = Skv // block_k
+    q_pos = q_offset + jnp.arange(Sq)
+    # §Perf C1 (REFUTED): casting P blocks to bf16 before the PV dot
+    # materialised both the f32 and bf16 copies in the XLA path (+26% HBM
+    # traffic); P stays f32 here — the VMEM-resident Pallas kernel is the
+    # path that truly removes this traffic on TPU.
+    p_dtype = jnp.float32
+
+    kb = k.reshape(B, nkb, block_k, H, dh).swapaxes(0, 1)
+    vb = v.reshape(B, nkb, block_k, H, dh).swapaxes(0, 1)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kt, vt, kb_idx = blk
+        k_pos = kb_idx * block_k + jnp.arange(block_k)
+        # C2: native-dtype QK dot with f32 accumulation — bf16 operands hit
+        # the MXU fast path and halve the q/k HBM reads vs upcast-first.
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kt,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)[None, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> use where
+        safe_m = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(jnp.where(jnp.isinf(s), -jnp.inf, s - safe_m[..., None]))
+        corr = jnp.where(jnp.isinf(m), jnp.zeros_like(m), jnp.exp(m - safe_m))
+        l = l * corr + p.sum(-1)
+        # probabilities cross HBM in p_dtype (§Perf iteration C1): the
+        # (bq, bk) P block is the dominant HBM traffic of the XLA flash path
+        # at 32k; the row stats (m, l) and accumulator stay f32.
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(p_dtype),
+            vt.astype(p_dtype)).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kb, vb, jnp.arange(nkb)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).swapaxes(1, 2).astype(q.dtype)
+    lse = jnp.where(jnp.isinf(m), m, m + jnp.log(l_safe))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, window, scale, q_offset, block_k):
+    out, _ = _flash_forward(q, k, v, causal=causal, window=window,
+                            scale=scale, q_offset=q_offset, block_k=block_k)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, scale, q_offset, block_k):
+    out, lse = _flash_forward(q, k, v, causal=causal, window=window,
+                              scale=scale, q_offset=q_offset, block_k=block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, scale, q_offset, block_k, res, dout):
+    """Flash backward: recompute probabilities block-by-block — memory per
+    step is O(Sq·block_k); the full S / P matrices are never stacked (the
+    naive scan backward saved them per block: 8 GiB/layer at 4k·f32)."""
+    q, k, v, out, lse = res
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    nkb = Skv // block_k
+    p_dtype = jnp.float32  # see C1 note in _flash_forward
+    qf = q.astype(jnp.float32) * scale
+    do = dout.astype(jnp.float32).swapaxes(1, 2)          # (B,H,Sq,dh)
+    delta = jnp.sum(do * out.astype(jnp.float32).swapaxes(1, 2), -1)  # (B,H,Sq)
+    q_pos = q_offset + jnp.arange(Sq)
+    kb = k.reshape(B, nkb, block_k, H, dh).swapaxes(0, 1)
+    vb = v.reshape(B, nkb, block_k, H, dh).swapaxes(0, 1)
+
+    def step(carry, blk):
+        dq, dk_acc, dv_acc = carry
+        kt, vt, kb_idx = blk
+        k_pos = kb_idx * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kt.astype(jnp.float32))
+        s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)[None, None]
+        p = jnp.where(jnp.isinf(s) | jnp.isinf(lse[..., None]), 0.0,
+                      jnp.exp(s - lse[..., None]))        # (B,H,Sq,block)
+        pb = p.astype(p_dtype)                            # C1: low-p HBM blocks
+        dv = jnp.einsum("bhqk,bhqd->bkhd", pb,
+                        do.astype(p_dtype)).astype(jnp.float32)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", do, vt.astype(jnp.float32))
+        ds = (p * (dp - delta[..., None])).astype(p_dtype)  # d(scores)
+        dq = dq + scale * jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                     kt.astype(p_dtype)).astype(jnp.float32)
+        dk = scale * jnp.einsum("bhqk,bqhd->bkhd", ds,
+                                q.astype(p_dtype)).astype(jnp.float32)
+        # accumulate dk/dv into the carry (dynamic-update-slice): with the
+        # query dim sharded, XLA reduces the partial sums ONCE after the
+        # scan instead of all-reducing every block (§Perf iteration Q4).
+        dk_acc = jax.lax.dynamic_update_slice_in_dim(
+            dk_acc, dk, kb_idx * block_k, axis=1)
+        dv_acc = jax.lax.dynamic_update_slice_in_dim(
+            dv_acc, dv, kb_idx * block_k, axis=1)
+        return (dq, dk_acc, dv_acc), None
+
+    dq0 = jnp.zeros((B, Sq, H, dh), jnp.float32)
+    dkv0 = jnp.zeros((B, Skv, H, dh), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(
+        step, (dq0, dkv0, dkv0), (kb, vb, jnp.arange(nkb)))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def attention_xla(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
+                  block_k: int = 512):
+    """TPU-adapted QK/SV modules: same tiling idea, online softmax over key
+    tiles (running max/sum) so S is never materialised, with a flash-style
+    custom VJP (blockwise recompute) so the backward never stacks P either.
+    This is what the dry-run lowers and what training uses on non-TPU
+    backends."""
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    k = _broadcast_kv(k, H)
+    v = _broadcast_kv(v, H)
+    if Skv <= block_k or Skv % block_k:
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   scale=scale, q_offset=q_offset)
+    return _flash_attention(q, k, v, causal, window, scale, q_offset,
+                            block_k)
+
+
+def attention(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
+              cfg: FamousConfig = FamousConfig()):
+    """Dense multi-head attention — FAMOUS QK_PM → softmax → SV_PM."""
+    if cfg.impl == "reference":
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   scale=scale, q_offset=q_offset)
+    if cfg.impl == "pallas":
+        from repro.kernels.attention import ops as attn_ops
+        return attn_ops.mha(q, k, v, causal=causal, window=window, scale=scale,
+                            q_offset=q_offset, block_q=cfg.tile_q,
+                            block_k=cfg.tile_k)
+    return attention_xla(q, k, v, causal=causal, window=window, scale=scale,
+                         q_offset=q_offset, block_k=cfg.tile_k)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None,
+                     cfg: FamousConfig = FamousConfig()):
+    """One-token attention against a KV cache (serving decode step).
+
+    q: (B, 1, H, dh); caches: (B, S_max, KV, dh); cache_len: (B,) int32 —
+    number of valid cache entries (the new token's k/v already written).
+    """
+    B, _, H, dh = q.shape
+    Smax = k_cache.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    if cfg.impl == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+        return dec_ops.decode_attention(q, k_cache, v_cache, cache_len,
+                                        window=window, scale=scale,
+                                        block_k=cfg.tile_k)
+    k = _broadcast_kv(k_cache, H)
+    v = _broadcast_kv(v_cache, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    pos = jnp.arange(Smax)[None, :]                      # (1, Smax)
+    ok = pos < cache_len[:, None]
+    if window:
+        ok &= pos > (cache_len[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full MHA layer (projection + attention + output) — the paper's fig. 3 box.
+# ---------------------------------------------------------------------------
+
+def mha_block(x, params, *, num_heads, num_kv_heads, causal=True, window=0,
+              qk_norm_fn=None, cfg: FamousConfig = FamousConfig(),
+              rope_fn=None, q_offset=0):
+    """x: (B, S, D).  params: dict with wq/wk/wv (D,H,dh), optional b*,
+    wo (H, dh, D).  Returns (B, S, D)."""
+    q, k, v = qkv_projection(
+        x, params["wq"], params["wk"], params["wv"],
+        params.get("bq"), params.get("bk"), params.get("bv"), cfg=cfg)
+    if qk_norm_fn is not None:
+        q, k = qk_norm_fn(q, k)
+    if rope_fn is not None:
+        q, k = rope_fn(q, k)
+    out = attention(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                    cfg=cfg)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(out.dtype))

@@ -1,0 +1,102 @@
+"""Runtime programmability — paper §IV-C mapped to TPU.
+
+FAMOUS synthesises once (fixing TS and resource maxima) and then serves any
+(heads, d_model, sequence length) at or below the synthesis-time maxima by
+reprogramming loop bounds from the MicroBlaze at runtime — no re-synthesis.
+
+The TPU analogue of "synthesis" is XLA compilation.  Two mechanisms:
+
+* :class:`FlexibleAttention` — ONE compiled executable at the maxima.  Smaller
+  topologies are zero-padded to the maxima and masked; the actual head count,
+  head dim and sequence length arrive as *runtime operands* (like the µB
+  control words), so no recompilation ever happens.  Padded heads are the
+  idle PE groups of tests #2–#3; padded sequence = masked keys; the softmax
+  scale uses the actual head dim (tests #4–#5's d_model sweep).
+
+* :class:`BucketCache` — a small executable cache keyed by rounded-up shape
+  buckets, trading a handful of compilations for zero padding waste.  The
+  serving engine uses this; the single-program mode is the paper-faithful
+  extreme point (bucket count = 1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import famous
+
+
+class FlexibleAttention:
+    """One executable, every topology ≤ (max_heads, max_seq, max_head_dim)."""
+
+    def __init__(self, max_heads: int, max_seq: int, max_head_dim: int,
+                 cfg: famous.FamousConfig | None = None, causal: bool = True):
+        self.max_heads = max_heads
+        self.max_seq = max_seq
+        self.max_head_dim = max_head_dim
+        self.cfg = cfg or famous.FamousConfig()
+        self.causal = causal
+        self._fn = jax.jit(self._padded_attention)
+        self.compilations = 0
+
+    def _padded_attention(self, q, k, v, seq_len, head_dim):
+        # q,k,v: (B, max_seq, max_heads, max_head_dim) zero-padded.
+        scale = 1.0 / jnp.sqrt(head_dim.astype(jnp.float32))
+        kpos = jnp.arange(self.max_seq)
+        qpos = jnp.arange(self.max_seq)
+        ok = (kpos < seq_len)[None, :]                      # key padding mask
+        if self.causal:
+            ok = ok & (kpos[None, :] <= qpos[:, None])
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        big_neg = jnp.finfo(jnp.float32).min
+        s = jnp.where(ok[None, None], s, big_neg)           # finite: padded q
+        p = jax.nn.softmax(s, axis=-1)                      # rows stay NaN-free
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+    def __call__(self, q, k, v):
+        """q,k,v: (B, S, H, dh) with S ≤ max_seq, H ≤ max_heads, dh ≤ max."""
+        B, S, H, dh = q.shape
+        assert S <= self.max_seq and H <= self.max_heads and dh <= self.max_head_dim, (
+            f"topology {(S, H, dh)} exceeds synthesis-time maxima "
+            f"{(self.max_seq, self.max_heads, self.max_head_dim)}")
+
+        def pad(x):
+            return jnp.pad(x, ((0, 0), (0, self.max_seq - S),
+                               (0, self.max_heads - H),
+                               (0, self.max_head_dim - dh)))
+
+        out = self._fn(pad(q), pad(k), pad(v), jnp.int32(S), jnp.int32(dh))
+        return out[:, :S, :H, :dh]
+
+
+class BucketCache:
+    """Shape-bucketed executable cache: compile per bucket, pad within."""
+
+    def __init__(self, fn: Callable, bucket_fn: Callable[[int], int] | None = None):
+        self._fn = fn
+        self._cache: dict = {}
+        self._bucket = bucket_fn or next_pow2
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, seq: int):
+        b = self._bucket(seq)
+        if b not in self._cache:
+            self.misses += 1
+            self._cache[b] = jax.jit(functools.partial(self._fn, bucket=b),
+                                     static_argnames=())
+        else:
+            self.hits += 1
+        return self._cache[b], b
+
+    def __len__(self):
+        return len(self._cache)
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()

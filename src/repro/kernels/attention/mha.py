@@ -1,0 +1,114 @@
+"""Fused MHA forward Pallas TPU kernel — FAMOUS QK_PM → softmax → SV_PM in
+one pass over key tiles.
+
+Mapping from the paper (DESIGN.md §2): the (block_q, block_k) tile pair is
+the TS analogue; Q tiles stay resident in VMEM (the Q BRAM), K/V tiles
+stream through (the K/V BRAMs being reloaded per iteration), the MXU plays
+the PE array and the VPU the LUT-based softmax.  Unlike the FPGA (SL=64),
+S is never materialised: an online (running max/sum) softmax accumulates
+into a VMEM scratch accumulator across the key-tile grid dimension.
+
+Grid: (B·H, Sq/block_q, Skv/block_k) — the last dimension is sequential
+("arbitrary"), carrying (acc, m, l) scratch across key tiles; batch·head and
+query tiles are parallel.  GQA is handled in the K/V index maps (q head h
+reads kv head h // group), mirroring FAMOUS's shared-K-BRAM PE groups.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, causal: bool, window: int, block_q: int,
+                block_k: int, num_k_blocks: int, q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def mha_forward(q, k, v, *, causal: bool = True, window: int = 0,
+                scale: float | None = None, q_offset: int = 0,
+                block_q: int = 512, block_k: int = 512,
+                interpret: bool = False):
+    """q: (BH, Sq, dh); k, v: (BKV, Skv, dh) with BH = BKV * group.
+    Returns (BH, Sq, dh)."""
+    BH, Sq, dh = q.shape
+    BKV, Skv, _ = k.shape
+    group = BH // BKV
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+    grid = (BH, nq, nk)
+
+    kernel = functools.partial(
+        _mha_kernel, scale=float(scale), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_k_blocks=nk, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, iq, ik, group=group: (bh // group, ik, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, iq, ik, group=group: (bh // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running sum l
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

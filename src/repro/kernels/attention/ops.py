@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the fused MHA kernel.
+
+Layout adaptation: model code uses (B, S, H, dh); the kernel uses flattened
+(B·H, S, dh).  Backward: flash custom-VJP from the FAMOUS core (blockwise
+recompute) — on TPU the forward runs this kernel; the backward runs the XLA
+flash path (a dedicated bwd kernel is a further optimisation documented in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import mha as mha_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_flat(x):  # (B, S, H, dh) -> (B*H, S, dh)
+    B, S, H, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+
+
+def _from_flat(x, B, H):  # (B*H, S, dh) -> (B, S, H, dh)
+    BH, S, dh = x.shape
+    return x.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "q_offset", "block_q", "block_k",
+    "interpret"))
+def mha(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
+        block_q=512, block_k=512, interpret=None):
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh). Returns (B, Sq, H, dh)."""
+    B, Sq, H, dh = q.shape
+    interpret = _interpret_default() if interpret is None else interpret
+    out = mha_kernel.mha_forward(
+        _to_flat(q), _to_flat(k), _to_flat(v), causal=causal, window=window,
+        scale=scale, q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return _from_flat(out, B, H)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused MHA kernel (paper Algorithms 2 & 3)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None, q_offset: int = 0):
+    """q: (BH, Sq, dh); k, v: (BKV, Skv, dh), BH = BKV * group.
+    Materialised-S softmax attention — the QK_PM/softmax/SV_PM oracle."""
+    BH, Sq, dh = q.shape
+    BKV, Skv, _ = k.shape
+    group = BH // BKV
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

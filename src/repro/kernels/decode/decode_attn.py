@@ -1,0 +1,99 @@
+"""Single-token decode attention Pallas kernel (serving hot loop).
+
+One query token per sequence attends to a (possibly ring-buffered) KV cache.
+Grid: (B·KV, Skv/block_k) — key tiles stream sequentially with online
+softmax; the per-kv-head group of query heads (GQA) rides along as the row
+dimension of the (group, dh) query block, so one cache DMA feeds all grouped
+query heads (FAMOUS's shared-K-BRAM PE grouping).
+
+``cache_len`` masking uses a scalar read from a (B, 1) int32 input —
+the runtime-programmable "sequence length register" of the paper's µB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, block_k: int, n_k: int,
+                   window: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (group, dh)
+    k = k_ref[0].astype(jnp.float32)                  # (block_k, dh)
+    v = v_ref[0].astype(jnp.float32)
+    valid_len = len_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (group, bk)
+    pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = pos < valid_len
+    if window:
+        ok &= pos > valid_len - 1 - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     scale: float | None = None, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (BKV, group, dh); caches: (BKV, Skv, dh); cache_len: (BKV,) int32.
+    Returns (BKV, group, dh)."""
+    BKV, group, dh = q.shape
+    Skv = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    block_k = min(block_k, Skv)
+    assert Skv % block_k == 0
+    n_k = Skv // block_k
+    grid = (BKV, n_k)
+    lens = cache_len.reshape(BKV, 1).astype(jnp.int32)
+    kernel = functools.partial(_decode_kernel, scale=float(scale),
+                               block_k=block_k, n_k=n_k, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, ik: (b, 0),
+                         memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec((1, group, dh), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, dh), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, group, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, dh), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)

@@ -1,0 +1,35 @@
+"""Jitted wrapper for decode attention: (B, 1, H, dh) model layout to the
+kernel's (B·KV, group, dh) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode import decode_attn
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None,
+                     block_k=512, interpret=None):
+    """q: (B, 1, H, dh); caches: (B, Skv, KV, dh); cache_len: (B,) int32.
+    Returns (B, 1, H, dh)."""
+    B, _, H, dh = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    # (B, 1, H, dh) -> (B, KV, group, dh) -> (B*KV, group, dh)
+    qf = q[:, 0].reshape(B, KV, group, dh).reshape(B * KV, group, dh)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
+    lens = jnp.repeat(cache_len, KV)
+    out = decode_attn.decode_attention(qf, kf, vf, lens, window=window,
+                                       scale=scale, block_k=block_k,
+                                       interpret=interpret)
+    return out.reshape(B, KV, group, dh).reshape(B, 1, H, dh)

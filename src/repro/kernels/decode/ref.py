@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_reference(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     scale: float | None = None):
+    """q: (BKV, group, dh); caches: (BKV, Skv, dh); cache_len: (BKV,)."""
+    BKV, group, dh = q.shape
+    Skv = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(Skv)[None, :]
+    ok = pos < cache_len[:, None]
+    if window:
+        ok &= pos > (cache_len[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bgk,bkd->bgd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,49 @@
+"""Jitted wrapper: fused Q/K/V projection via the tiled matmul kernel.
+
+Fuses [Wq|Wk|Wv] into one (D, F) matrix so the X tile is read once per grid
+step and feeds all three projections — the QKV_PM shared-X-BRAM trick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+from repro.kernels.qkv import qkv_proj
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "quant", "interpret"))
+def qkv_projection(x, wq, wk, wv, bq=None, bk=None, bv=None, *,
+                   tile_d: int = 512, quant: str = "none", interpret=None):
+    """x: (B, S, D); w*: (D, H|KV, dh). Returns (q, k, v)."""
+    B, S, D = x.shape
+    interpret = _interpret_default() if interpret is None else interpret
+    shapes = [wq.shape[1:], wk.shape[1:], wv.shape[1:]]
+    w = jnp.concatenate([wq.reshape(D, -1), wk.reshape(D, -1),
+                         wv.reshape(D, -1)], axis=-1)
+    xt = x.reshape(B * S, D)
+    if quant == "int8":
+        xq, sx = quant_lib.quantize(xt, axis=1)
+        wqz, sw = quant_lib.quantize(w, axis=0)
+        out = qkv_proj.matmul_tiled_int8(
+            xq, wqz, sx, sw, block_d=tile_d, out_dtype=jnp.float32,
+            interpret=interpret).astype(x.dtype)
+    else:
+        out = qkv_proj.matmul_tiled(xt, w, block_d=tile_d,
+                                    interpret=interpret)
+    nq = shapes[0][0] * shapes[0][1]
+    nk = shapes[1][0] * shapes[1][1]
+    q = out[:, :nq].reshape(B, S, *shapes[0])
+    k = out[:, nq:nq + nk].reshape(B, S, *shapes[1])
+    v = out[:, nq + nk:].reshape(B, S, *shapes[2])
+    if bq is not None:
+        q = q + bq.astype(q.dtype)
+        k = k + bk.astype(k.dtype)
+        v = v + bv.astype(v.dtype)
+    return q, k, v

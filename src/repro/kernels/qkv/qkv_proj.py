@@ -1,0 +1,115 @@
+"""Tiled fused QKV projection Pallas kernel — FAMOUS Algorithm 1 on TPU.
+
+The weight matrices are tiled along the *reduction* dimension (the paper's
+column tiling, TS = ``block_d``): each grid step DMAs one (block_t × block_d)
+X tile — read once, used for all of Q, K and V like the shared X_i BRAM —
+and one (block_d × block_f) tile of the fused [Wq|Wk|Wv] matrix, accumulating
+partial products in a VMEM f32 scratch exactly as the FPGA accumulates
+per-tile partial sums across BRAM reloads.
+
+Grid: (T/block_t, F/block_f, D/block_d), reduction innermost ("arbitrary").
+
+int8 variant (the paper's 8-bit fixed point): int8×int8→int32 MXU dot,
+dequantised on flush by per-token and per-column scales.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _proj_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
+    i_d = pl.program_id(2)
+
+    @pl.when(i_d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(i_d == n_d - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _proj_kernel_int8(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
+                      n_d: int):
+    i_d = pl.program_id(2)
+
+    @pl.when(i_d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(i_d == n_d - 1)
+    def _flush():
+        deq = (acc_ref[...].astype(jnp.float32)
+               * sx_ref[...] * sw_ref[...])
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def matmul_tiled(x, w, *, block_t: int = 256, block_f: int = 256,
+                 block_d: int = 512, out_dtype=None,
+                 interpret: bool = False):
+    """x: (T, D) @ w: (D, F) -> (T, F), reduction-tiled (TS = block_d)."""
+    T, D = x.shape
+    _, F = w.shape
+    block_t = min(block_t, T)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert T % block_t == 0 and F % block_f == 0 and D % block_d == 0
+    n_d = D // block_d
+    grid = (T // block_t, F // block_f, n_d)
+    return pl.pallas_call(
+        functools.partial(_proj_kernel, n_d=n_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_d), lambda it, jf, kd: (it, kd)),
+            pl.BlockSpec((block_d, block_f), lambda it, jf, kd: (kd, jf)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_f), lambda it, jf, kd: (it, jf)),
+        out_shape=jax.ShapeDtypeStruct((T, F), out_dtype or x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)
+
+
+def matmul_tiled_int8(xq, wq, sx, sw, *, block_t: int = 256,
+                      block_f: int = 256, block_d: int = 512,
+                      out_dtype=jnp.float32, interpret: bool = False):
+    """xq: (T, D) int8, wq: (D, F) int8, sx: (T, 1) f32, sw: (1, F) f32."""
+    T, D = xq.shape
+    _, F = wq.shape
+    block_t = min(block_t, T)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert T % block_t == 0 and F % block_f == 0 and D % block_d == 0
+    n_d = D // block_d
+    grid = (T // block_t, F // block_f, n_d)
+    return pl.pallas_call(
+        functools.partial(_proj_kernel_int8, n_d=n_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_d), lambda it, jf, kd: (it, kd)),
+            pl.BlockSpec((block_d, block_f), lambda it, jf, kd: (kd, jf)),
+            pl.BlockSpec((block_t, 1), lambda it, jf, kd: (it, 0)),
+            pl.BlockSpec((1, block_f), lambda it, jf, kd: (0, jf)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_f), lambda it, jf, kd: (it, jf)),
+        out_shape=jax.ShapeDtypeStruct((T, F), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, block_f), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xq, wq, sx, sw)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the tiled QKV projection kernel (Algorithm 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+
+
+def matmul_reference(x, w, out_dtype=None):
+    return jnp.einsum("td,df->tf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(out_dtype or x.dtype)
+
+
+def matmul_int8_reference(xq, wq, sx, sw, out_dtype=jnp.float32):
+    acc = jnp.einsum("td,df->tf", xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)
+
+
+def qkv_reference(x, wq, wk, wv, bq=None, bk=None, bv=None):
+    """x: (B, S, D); w*: (D, H, dh) -> q/k/v (B, S, H, dh)."""
+    def one(w, b):
+        y = jnp.einsum("bsd,dhe->bshe", x.astype(jnp.float32),
+                       w.astype(jnp.float32))
+        if b is not None:
+            y = y + b.astype(jnp.float32)
+        return y.astype(x.dtype)
+
+    return one(wq, bq), one(wk, bk), one(wv, bv)
+
+
+quantize = quant_lib.quantize

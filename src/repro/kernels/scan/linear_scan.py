@@ -1,0 +1,143 @@
+"""Linear-recurrence Pallas kernels (RG-LRU and RWKV-6 wkv).
+
+RG-LRU: h_t = a_t ⊙ h_{t-1} + b_t, elementwise in the feature dim.  Grid
+(B, R/block_r, S/block_s): time is sequential ("arbitrary"), the running
+state h lives in VMEM scratch across time tiles, and the time loop *within*
+a tile is a fori_loop over rows already resident in VMEM — the TPU-native
+reshaping of a recurrence that a GPU implementation would assign one thread
+per feature.  (batch, feature) tiles are parallel.
+
+wkv6: S_t = diag(w_t) S_{t-1} + k_t v_tᵀ; out_t = r_t (S_{t-1} + diag(u) k_t
+v_tᵀ).  Chunked parallel form (flash-linear-attention): within a chunk of C
+timesteps everything is dense matmuls with cumulative log-decay masks (MXU
+work); the (dh × dh) state crosses chunks in VMEM scratch.  Grid (B·H,
+S/C) with the chunk dim sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_ref, *, block_s: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)       # (block_s, block_r)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, block_s, body, h_ref[...])
+
+
+def rglru_scan(a, b, *, block_r: int = 512, block_s: int = 256,
+               interpret: bool = False):
+    """a, b: (B, S, R) -> h: (B, S, R) f32 with h_t = a_t h_{t-1} + b_t."""
+    B, S, R = a.shape
+    block_r = min(block_r, R)
+    block_s = min(block_s, S)
+    assert S % block_s == 0 and R % block_r == 0
+    grid = (B, R // block_r, S // block_s)
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_r), lambda b_, jr, it: (b_, it, jr)),
+            pl.BlockSpec((1, block_s, block_r), lambda b_, jr, it: (b_, it, jr)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_r),
+                               lambda b_, jr, it: (b_, it, jr)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_r,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 wkv — chunked
+# ---------------------------------------------------------------------------
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                 chunk: int, n_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    rb = r_ref[0].astype(jnp.float32)      # (C, dh)
+    kb = k_ref[0].astype(jnp.float32)
+    vb = v_ref[0].astype(jnp.float32)
+    wb = w_ref[0].astype(jnp.float32)      # log-decay <= 0
+    u = u_ref[0].astype(jnp.float32)       # (1, dh) bonus
+
+    cw = jnp.cumsum(wb, axis=0)            # inclusive logW_t
+    cw_prev = cw - wb
+    s = s_ref[...]                         # (dh, dh)
+
+    inter = jax.lax.dot_general(rb * jnp.exp(cw_prev), s,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    qexp = rb * jnp.exp(cw_prev)
+    kexp = kb * jnp.exp(-cw)
+    att = jax.lax.dot_general(qexp, kexp, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(si < ti, att, 0.0)     # strict lower triangle
+    diag = jnp.sum(rb * u * kb, axis=1, keepdims=True)  # (C, 1)
+    intra = jax.lax.dot_general(att, vb, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    intra = intra + diag * vb
+    o_ref[0, ...] = (inter + intra).astype(o_ref.dtype)
+
+    w_tail = jnp.exp(cw[-1:, :] - cw)      # decay from t..C  (C, dh)
+    k_dec = kb * w_tail
+    s_new = jnp.exp(cw[-1])[:, None] * s + jax.lax.dot_general(
+        k_dec, vb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+
+def wkv6_scan(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,logw: (BH, S, dh); u: (BH, dh). Returns out (BH, S, dh) f32."""
+    BH, S, dh = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    grid = (BH, n_chunks)
+    u2 = u.reshape(BH, 1, dh)
+    return pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, ic: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda b, ic: (b, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, logw, u2)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the linear-recurrence kernels: straight sequential
+scans (no chunking, no log-space tricks) — the ground truth."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_reference(a, b):
+    """h_t = a_t h_{t-1} + b_t ; a, b: (B, S, R) -> (B, S, R) f32."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    a = a.astype(jnp.float32).swapaxes(0, 1)
+    b = b.astype(jnp.float32).swapaxes(0, 1)
+    h0 = jnp.zeros_like(a[0])
+    _, hs = jax.lax.scan(step, h0, (a, b))
+    return hs.swapaxes(0, 1)
+
+
+def wkv6_reference(r, k, v, logw, u):
+    """Sequential wkv6. r,k,v,logw: (BH, S, dh); u: (BH, dh) -> (BH,S,dh)."""
+    rf, kf, vf, wf = (x.astype(jnp.float32).swapaxes(0, 1)
+                      for x in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+
+    def step(s, rkvw):
+        r_t, k_t, v_t, w_t = rkvw            # (BH, dh)
+        kv = jnp.einsum("bd,be->bde", k_t, v_t)
+        out = jnp.einsum("bd,bde->be", r_t, s + uf[..., None] * kv)
+        s = jnp.exp(w_t)[..., None] * s + kv
+        return s, out
+
+    BH, dh = rf.shape[1], rf.shape[2]
+    s0 = jnp.zeros((BH, dh, dh), jnp.float32)
+    _, outs = jax.lax.scan(step, s0, (rf, kf, vf, wf))
+    return outs.swapaxes(0, 1)

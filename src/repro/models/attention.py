@@ -1,0 +1,127 @@
+"""Attention block: GQA dense MHA built on the FAMOUS core, with KV caching
+(full or sliding-window ring buffer) for serving."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import famous
+from repro.models import layers
+from repro.models.module import ParamSpec
+from repro.parallel.incontext import constrain_attn_activations
+
+
+def attn_spec(cfg: ModelConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.attention_bias:
+        spec["bq"] = ParamSpec((h, dh), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec((kv, dh), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec((kv, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = ParamSpec((dh,), (None,), init="ones")
+        spec["k_norm"] = ParamSpec((dh,), (None,), init="ones")
+    return spec
+
+
+def make_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, window: int,
+                    dtype) -> dict:
+    """KV cache. Sliding-window layers use an O(window) ring buffer."""
+    slots = min(max_seq, window) if window else max_seq
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, slots, kv, dh)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def attn_cache_shape(cfg: ModelConfig, batch: int, max_seq: int, window: int,
+                     dtype) -> dict:
+    slots = min(max_seq, window) if window else max_seq
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    sds = jax.ShapeDtypeStruct((batch, slots, kv, dh), dtype)
+    return {"k": sds, "v": sds}
+
+
+ATTN_CACHE_AXES = {"k": ("batch", None, "kv_heads", "head_dim"),
+                   "v": ("batch", None, "kv_heads", "head_dim")}
+
+
+def _project(p, x, cfg: ModelConfig, fcfg: famous.FamousConfig, positions):
+    q, k, v = famous.qkv_projection(
+        x, p["wq"], p["wk"], p["wv"], p.get("bq"), p.get("bk"), p.get("bv"),
+        cfg=fcfg)
+    if cfg.qk_norm:
+        q = layers.rms_head_norm(q, p["q_norm"])
+        k = layers.rms_head_norm(k, p["k_norm"])
+    if cfg.rope:
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+    return constrain_attn_activations(q, k, v, cfg.num_heads)
+
+
+def apply_attn(p: dict, x: jax.Array, cfg: ModelConfig,
+               fcfg: famous.FamousConfig, *, window: int = 0,
+               q_offset: int = 0) -> jax.Array:
+    """Full-sequence attention (training / encoder / prefill compute)."""
+    S = x.shape[1]
+    positions = q_offset + jnp.arange(S)
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    out = famous.attention(q, k, v, causal=cfg.causal, window=window,
+                           q_offset=q_offset, cfg=fcfg)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+
+
+def apply_attn_prefill(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
+                       fcfg: famous.FamousConfig, *, window: int = 0):
+    """Prefill: full attention + populate the KV cache. Returns (out, cache)."""
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    out = famous.attention(q, k, v, causal=cfg.causal, window=window, cfg=fcfg)
+    slots = cache["k"].shape[1]
+    if slots >= S:
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1),
+        }
+    else:  # ring buffer keeps the last `slots` positions at pos % slots
+        tail_k, tail_v = k[:, S - slots:], v[:, S - slots:]
+        shift = S % slots  # slot of the oldest kept position
+        idx = (jnp.arange(slots) + shift) % slots
+        inv = jnp.argsort(idx)
+        cache = {"k": tail_k[:, inv], "v": tail_v[:, inv]}
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+    return o, cache
+
+
+def apply_attn_decode(p: dict, x: jax.Array, cache: dict, cache_len,
+                      cfg: ModelConfig, fcfg: famous.FamousConfig, *,
+                      window: int = 0):
+    """One-token decode. x: (B, 1, D); cache_len: (B,) valid entries BEFORE
+    this token. Returns (out, new_cache)."""
+    B = x.shape[0]
+    positions = cache_len[:, None]  # (B, 1) absolute positions
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    slots = cache["k"].shape[1]
+    slot = (cache_len % slots) if window else cache_len
+
+    def write(buf, new):
+        return jax.vmap(
+            lambda b, n, s: jax.lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
+        )(buf, new, slot)
+
+    cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+    valid = jnp.minimum(cache_len + 1, slots) if window else cache_len + 1
+    out = famous.decode_attention(q, cache["k"], cache["v"], valid, cfg=fcfg)
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+    return o, cache

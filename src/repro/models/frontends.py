@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per the assignment, ``[audio]``/``[vlm]`` entries
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+The stubs document what the real frontend would be and generate deterministic
+synthetic embeddings of the right shape for smoke tests and benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+FRONTEND_DOC = {
+    "audio": "HuBERT CNN waveform encoder: 7-layer conv stack, 20 ms stride "
+             "-> frame embeddings (B, S, d_model).",
+    "vlm": "LLaVA-NeXT anyres tiler + CLIP ViT + 2-layer MLP projector -> "
+           "patch embeddings interleaved with text embeddings (B, S, d_model).",
+}
+
+
+def embed_shape(cfg: ModelConfig, batch: int, seq: int):
+    return (batch, seq, cfg.d_model)
+
+
+def input_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-in for the frontend output (dry-run)."""
+    return jax.ShapeDtypeStruct(embed_shape(cfg, batch, seq), dtype)
+
+
+def synthetic_embeddings(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                         dtype=jnp.float32):
+    """Deterministic fake frontend output for smoke tests/benchmarks."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, embed_shape(cfg, batch, seq), jnp.float32)
+    return (0.02 * x).astype(dtype)

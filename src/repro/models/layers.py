@@ -1,0 +1,112 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings — pure-functional JAX."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str) -> dict:
+    spec = {"scale": ParamSpec((d,), (None,), init="ones")}
+    if kind == "layernorm":
+        spec["bias"] = ParamSpec((d,), (None,), init="zeros")
+    return spec
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    """Dtype-preserving norm: statistics accumulate in f32 (``dtype=`` on the
+    reduction) but the full tensor is never upcast — a full f32 copy of a
+    bf16 hidden state would otherwise escape the remat scan as a
+    loop-hoisted 2× activation stack (observed: +15 GiB/device on a 48-layer
+    dry-run)."""
+    dt = x.dtype
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(x), -1, keepdims=True, dtype=jnp.float32)
+        inv = jax.lax.rsqrt(ms + eps).astype(dt)
+        return x * inv * p["scale"].astype(dt)
+    mu = jnp.mean(x, -1, keepdims=True, dtype=jnp.float32)
+    xc = x - mu.astype(dt)
+    var = jnp.mean(jnp.square(xc), -1, keepdims=True, dtype=jnp.float32)
+    y = xc * jax.lax.rsqrt(var + eps).astype(dt)
+    return y * p["scale"].astype(dt) + p["bias"].astype(dt)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    """Per-head RMSNorm over head_dim (qwen3 qk-norm). x: (..., H, dh)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, dh), positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freq[None, :]  # (S, half)
+        ang = ang[None, :, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freq  # (B, S, half)
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP / FFN (the paper's position-wise feed-forward network)
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu_sq": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+def mlp_spec(d: int, d_ff: int, act: str, gated: bool = True) -> dict:
+    spec = {
+        "w_in": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "w_out": ParamSpec((d_ff, d), ("mlp", "embed")),
+    }
+    if gated:
+        spec["w_gate"] = ParamSpec((d, d_ff), ("embed", "mlp"))
+    return spec
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int) -> dict:
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"),
+                                   init="embed", scale=0.02)}
+
+
+def embed_lookup(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    # one-hot-free gather; GSPMD turns this into a sharded gather over vocab
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed_logits(p: dict, x: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      p["embedding"].astype(jnp.float32))

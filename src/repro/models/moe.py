@@ -1,0 +1,127 @@
+"""Token-choice top-k Mixture-of-Experts FFN (grok-1, kimi-k2).
+
+GShard/GSPMD-style *grouped dense dispatch*: tokens are split into G groups;
+each group dispatches into a per-group expert buffer of capacity C via a
+(G, S_g, E, C) one-hot einsum.  Everything is dense einsums, which GSPMD
+partitions perfectly (groups on the dp axes, experts on "model" = expert
+parallelism with all-to-all routing inserted by XLA).  A scatter/gather
+formulation was tried first and rejected: GSPMD replicates scatter operands,
+costing ~190 GiB/device on grok-1 (see EXPERIMENTS.md §Perf).
+
+Capacity inflation is bounded: C = ceil(cf · S_g · K / E) per group, so the
+buffer is cf·K·T token-slots globally.  Tokens beyond an expert's capacity
+within their group are dropped (standard GShard semantics); priority is
+earlier-rank choice first, then sequence order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.module import ParamSpec
+from repro.parallel.incontext import constrain
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        # Router stays REPLICATED (K1): sharding its tiny (d, E) matrix over
+        # "model" forced a (G,S,E) all-gather before top_k plus a ~2 GiB dx
+        # all-reduce per layer — 8 s/step on kimi-k2 for a 2.7M-param matmul.
+        "router": ParamSpec((d, e), ("embed", None), scale=0.02,
+                            dtype=jnp.float32),
+        # Expert weights: experts on "model" (EP), d_ff on "data" (K2) —
+        # the FSDP gather of the d_model dim moved 4x more bytes than the
+        # partial-sum all-reduce this layout pays on the down-projection.
+        "w_in": ParamSpec((e, d, f), ("experts", None, "expert_ff")),
+        "w_gate": ParamSpec((e, d, f), ("experts", None, "expert_ff")),
+        "w_out": ParamSpec((e, f, d), ("experts", "expert_ff", None)),
+    }
+
+
+def _group_shape(T: int, target_group: int = 256) -> tuple[int, int]:
+    """Split T tokens into (G, S_g) with T = G*S_g and S_g ~ target."""
+    sg = min(target_group, T)
+    while T % sg:
+        sg -= 1
+    return T // sg, sg
+
+
+def router_dispatch(logits: jax.Array, K: int, capacity_factor: float,
+                    softcap: float = 0.0):
+    """logits: (G, S, E) f32.  Returns (dispatch (G,S,E,C) bf16,
+    combine (G,S,E,C) f32, aux metrics)."""
+    G, S, E = logits.shape
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    C = max(4, int(-(-capacity_factor * S * K // E)))
+    C = min(C, S)
+    gates = jax.nn.softmax(logits, axis=-1)               # (G,S,E)
+    topw, topi = jax.lax.top_k(logits, K)                 # (G,S,K)
+    topw = jax.nn.softmax(topw, axis=-1)
+
+    running = jnp.zeros((G, 1, E), jnp.int32)             # used capacity
+    dispatch = jnp.zeros((G, S, E, C), jnp.bfloat16)
+    combine = jnp.zeros((G, S, E, C), jnp.float32)
+    for k in range(K):
+        mask_k = jax.nn.one_hot(topi[..., k], E, dtype=jnp.int32)   # (G,S,E)
+        pos_k = running + jnp.cumsum(mask_k, axis=1) - mask_k       # (G,S,E)
+        keep = (pos_k < C) & (mask_k > 0)
+        oh = jax.nn.one_hot(jnp.where(keep, pos_k, C), C + 1,
+                            dtype=jnp.bfloat16)[..., :C]            # (G,S,E,C)
+        oh = oh * mask_k[..., None].astype(jnp.bfloat16)
+        dispatch = dispatch + oh
+        combine = combine + oh.astype(jnp.float32) * topw[..., k, None, None]
+        running = running + jnp.sum(mask_k, axis=1, keepdims=True)
+    frac = jnp.mean(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=(0, 1, 2))
+    aux = E * jnp.sum(frac * gates.mean((0, 1)))          # load-balance loss
+    return dispatch, combine, aux
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
+              return_aux: bool = False):
+    """x: (B, S, D) -> (B, S, D).  Grouped dense top-k routing."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    G, Sg = _group_shape(T)
+    xg = constrain(x.reshape(G, Sg, D), ("batch", None, None))
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    logits = constrain(logits, ("batch", None, None))
+    dispatch, combine, aux = router_dispatch(
+        logits, K, cfg.capacity_factor, cfg.logit_softcap)
+    dispatch = constrain(dispatch, ("batch", None, "experts", None))
+
+    buf = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    buf = constrain(buf, ("batch", "experts", None, None))
+    h_in = jnp.einsum("gecd,edf->gecf", buf, p["w_in"].astype(x.dtype))
+    h_gate = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(x.dtype))
+    h = layers.act_fn(cfg.act)(h_gate) * h_in
+    # named for the MoE remat policy (K3): saving h/out_buf stops the remat
+    # pass from re-all-gathering every expert weight a second time.
+    h = checkpoint_name(h, "moe_hidden")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(x.dtype))
+    out_buf = constrain(out_buf, ("batch", "experts", None, None))
+    out_buf = checkpoint_name(out_buf, "moe_out")
+
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), out_buf)
+    y = y.reshape(B, S, D)
+    if return_aux:
+        return y, aux
+    return y
+
+
+def aux_load_balance_loss(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean fraction * prob)."""
+    B, S, D = x.shape
+    T = B * S
+    G, Sg = _group_shape(T)
+    xg = x.reshape(G, Sg, D)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    _, _, aux = router_dispatch(logits, cfg.experts_per_token,
+                                cfg.capacity_factor, cfg.logit_softcap)
+    return aux

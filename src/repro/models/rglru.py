@@ -1,0 +1,141 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+Training/prefill uses an associative scan over time (state is elementwise in
+the feature dim, so the scan element is O(width)); decode carries (h, conv
+ring) state.  The Pallas chunked-scan kernel (kernels/scan) is the TPU
+hot-path analogue; this module is its ref and the XLA dry-run path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.module import ParamSpec
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin §2.4)
+
+
+def rglru_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    r = cfg.lru_width or d
+    w = cfg.conv_width
+    return {
+        "w_x": ParamSpec((d, r), ("embed", "mlp")),
+        "w_gate": ParamSpec((d, r), ("embed", "mlp")),
+        "conv_w": ParamSpec((w, r), (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((r,), ("mlp",), init="zeros"),
+        "w_a": ParamSpec((r, r), ("mlp", None)),
+        "b_a": ParamSpec((r,), (None,), init="zeros"),
+        "w_i": ParamSpec((r, r), ("mlp", None)),
+        "b_i": ParamSpec((r,), (None,), init="zeros"),
+        # Λ parameterised so a = exp(-C*softplus(Λ)·r_t) starts near 0.9..0.99
+        "lam": ParamSpec((r,), (None,), init="uniform", scale=1.0),
+        "w_out": ParamSpec((r, d), ("mlp", "embed")),
+    }
+
+
+def _gates(p, xc):
+    """Recurrence gate r_t and input gate i_t from the conv output."""
+    rg = jax.nn.sigmoid(
+        jnp.einsum("bsr,rk->bsk", xc, p["w_a"].astype(xc.dtype)).astype(jnp.float32)
+        + p["b_a"].astype(jnp.float32))
+    ig = jax.nn.sigmoid(
+        jnp.einsum("bsr,rk->bsk", xc, p["w_i"].astype(xc.dtype)).astype(jnp.float32)
+        + p["b_i"].astype(jnp.float32))
+    return rg, ig
+
+
+def _decay(p, rg):
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * rg
+    a = jnp.exp(log_a)
+    return a, jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+
+def rglru_scan(p, xc):
+    """xc: (B, S, R) conv output -> recurrence output (B, S, R) float32."""
+    rg, ig = _gates(p, xc)
+    a, gain = _decay(p, rg)
+    b = gain * (ig * xc.astype(jnp.float32))
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(p, xc_t, h_prev):
+    """One decode step. xc_t: (B, R); h_prev: (B, R) f32 -> (h_t, h_t)."""
+    xc = xc_t[:, None, :]
+    rg, ig = _gates(p, xc)
+    a, gain = _decay(p, rg)
+    b = gain * (ig * xc.astype(jnp.float32))
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h
+
+
+def _conv1d(p, x, state=None):
+    """Causal depthwise temporal conv, width W. x: (B, S, R).
+    state: (B, W-1, R) previous inputs for decode; returns (y, new_state)."""
+    w = p["conv_w"].astype(jnp.float32)  # (W, R)
+    W = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), jnp.float32)
+    else:
+        pad = state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    y = y + p["conv_b"].astype(jnp.float32)
+    new_state = xp[:, -(W - 1):]
+    return y, new_state
+
+
+def make_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    r = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), jnp.float32),
+    }
+
+
+def rglru_cache_shape(cfg: ModelConfig, batch: int, dtype) -> dict:
+    r = cfg.lru_width or cfg.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, r), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, r), jnp.float32),
+    }
+
+
+RGLRU_CACHE_AXES = {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+
+
+def apply_rglru(p: dict, x: jax.Array, cfg: ModelConfig,
+                cache: dict | None = None):
+    """x: (B, S, D) -> (B, S, D); if cache given, runs prefill and returns
+    (out, new_cache)."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p["w_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dr->bsr", x, p["w_gate"].astype(x.dtype))
+    xc, conv_state = _conv1d(p, xb, None if cache is None else cache["conv"])
+    h = rglru_scan(p, xc)
+    y = jax.nn.gelu(gate.astype(jnp.float32)) * h
+    out = jnp.einsum("bsr,rd->bsd", y.astype(x.dtype), p["w_out"].astype(x.dtype))
+    if cache is None:
+        return out
+    new_cache = {"h": h[:, -1], "conv": conv_state}
+    return out, new_cache
+
+
+def apply_rglru_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One token. x: (B, 1, D) -> (out (B,1,D), new_cache)."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p["w_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dr->bsr", x, p["w_gate"].astype(x.dtype))
+    xc, conv_state = _conv1d(p, xb, cache["conv"])
+    h = rglru_step(p, xc[:, 0], cache["h"])
+    y = jax.nn.gelu(gate[:, 0].astype(jnp.float32)) * h
+    out = jnp.einsum("br,rd->bd", y.astype(x.dtype), p["w_out"].astype(x.dtype))
+    return out[:, None], {"h": h, "conv": conv_state}

@@ -1,0 +1,230 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention + channel mix.
+
+wkv6 recurrence per head (state S ∈ R^{dk×dv}):
+
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ,       w_t = exp(-exp(ŵ_t)) ∈ (0,1)
+
+Training/prefill uses the *chunked* parallel form (flash-linear-attention
+style): intra-chunk via masked matmuls with cumulative log-decays (all decay
+ratios ≤ 1 → numerically safe), inter-chunk state carried by a lax.scan.
+The Pallas kernel in kernels/scan implements the same algorithm; this is its
+oracle and the XLA path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.module import ParamSpec
+
+_LORA = 64  # low-rank width of the data-dependent decay projection
+
+
+def rwkv6_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    lora = min(_LORA, d)
+    return {
+        # token-shift mixing coefficients (r, k, v, w, g)
+        "mu": ParamSpec((5, d), (None, "embed"), init="uniform", scale=0.5),
+        "w_r": ParamSpec((d, d), ("embed", "heads_flat")),
+        "w_k": ParamSpec((d, d), ("embed", "heads_flat")),
+        "w_v": ParamSpec((d, d), ("embed", "heads_flat")),
+        "w_g": ParamSpec((d, d), ("embed", "heads_flat")),
+        # decay: ŵ_t = w0 + tanh(x̄ A) B   (low-rank data dependence)
+        "w0": ParamSpec((d,), ("heads_flat",), init="uniform", scale=1.0),
+        "wA": ParamSpec((d, lora), ("embed", None), scale=0.1),
+        "wB": ParamSpec((lora, d), (None, "heads_flat"), scale=0.1),
+        "u": ParamSpec((h, dh), ("heads", "head_dim"), init="uniform", scale=0.5),
+        "ln_scale": ParamSpec((d,), ("heads_flat",), init="ones"),
+        "ln_bias": ParamSpec((d,), ("heads_flat",), init="zeros"),
+        "w_o": ParamSpec((d, d), ("heads_flat", "embed")),
+    }
+
+
+def channel_mix_spec(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": ParamSpec((2, d), (None, "embed"), init="uniform", scale=0.5),
+        "w_k": ParamSpec((d, f), ("embed", "mlp")),
+        "w_v": ParamSpec((f, d), ("mlp", "embed")),
+        "w_r": ParamSpec((d, d), ("embed", None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv6 core — chunked parallel form
+# ---------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, logw, u, s0=None, chunk: int = 64):
+    """r,k,v,logw: (B, H, S, dh); logw ≤ 0. u: (H, dh).
+    Returns (out (B,H,S,dh) f32, s_final (B,H,dh,dh) f32)."""
+    B, H, S, dh = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    f32 = jnp.float32
+    r, k, v, logw = (x.astype(f32) for x in (r, k, v, logw))
+    rc = r.reshape(B, H, n, chunk, dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, n, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, n, chunk, dh).transpose(2, 0, 1, 3, 4)
+    wc = logw.reshape(B, H, n, chunk, dh).transpose(2, 0, 1, 3, 4)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dh, dh), f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)  # strict lower
+
+    def step(s, blk):
+        rb, kb, vb, wb = blk                      # (B,H,C,dh)
+        cw = jnp.cumsum(wb, axis=2)               # logW_t   (inclusive)
+        cw_prev = cw - wb                          # logW_{t-1}
+        # inter-chunk: r_t ⊙ W_{t-1} applied to incoming state
+        r_dec = rb * jnp.exp(cw_prev)
+        inter = jnp.einsum("bhtd,bhde->bhte", r_dec, s)
+        # intra-chunk: A[t,s] = Σ_d r[t,d]·exp(cw_prev[t,d]-cw[s,d])·k[s,d], s<t
+        # (decay from s+1..t-1 inclusive = cw_prev[t] - cw[s])
+        qexp = rb * jnp.exp(cw_prev)               # fold exp(cw_prev) into r
+        kexp = kb * jnp.exp(-cw)                   # fold exp(-cw) into k
+        att = jnp.einsum("bhtd,bhsd->bhts", qexp, kexp) * tri
+        diag = jnp.einsum("bhtd,bhtd->bht", rb * u[None, :, None, :], kb)
+        intra = jnp.einsum("bhts,bhse->bhte", att, vb) + diag[..., None] * vb
+        # state update: S' = diag(W_C) S + Σ_t diag(W_C/W_t) k_t v_tᵀ
+        wC = jnp.exp(cw[:, :, -1])                 # (B,H,dh)
+        k_dec = kb * jnp.exp(cw[:, :, -1:, :] - cw)
+        s_new = wC[..., None] * s + jnp.einsum("bhtd,bhte->bhde", k_dec, vb)
+        return s_new, inter + intra
+
+    s_final, outs = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+    return out, s_final
+
+
+def wkv6_step(r, k, v, logw, u, s):
+    """One decode step. r,k,v,logw: (B, H, dh); s: (B, H, dh, dh)."""
+    f32 = jnp.float32
+    r, k, v, logw = (x.astype(f32) for x in (r, k, v, logw))
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    out = jnp.einsum("bhd,bhde->bhe", r, s + u[None, :, :, None] * kv)
+    s_new = jnp.exp(logw)[..., None] * s + kv
+    return out, s_new
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, prev):
+    """x: (B, S, D); prev: (B, D) last token of the previous segment."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def make_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    return {
+        "s": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), dtype),   # time-mix token shift
+        "x_cm": jnp.zeros((batch, d), dtype),   # channel-mix token shift
+    }
+
+
+def rwkv_cache_shape(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    return {
+        "s": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "x_tm": jax.ShapeDtypeStruct((batch, d), dtype),
+        "x_cm": jax.ShapeDtypeStruct((batch, d), dtype),
+    }
+
+
+RWKV_CACHE_AXES = {"s": ("batch", "heads", None, None),
+                   "x_tm": ("batch", "embed"), "x_cm": ("batch", "embed")}
+
+
+def _time_mix_qkvwg(p, x, x_prev):
+    d = x.shape[-1]
+    xs = [_mix(x, x_prev, p["mu"][i]) for i in range(5)]
+    dt = x.dtype
+    r = jnp.einsum("bsd,df->bsf", xs[0], p["w_r"].astype(dt))
+    k = jnp.einsum("bsd,df->bsf", xs[1], p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,df->bsf", xs[2], p["w_v"].astype(dt))
+    g = jnp.einsum("bsd,df->bsf", xs[4], p["w_g"].astype(dt))
+    wx = _mix(x, x_prev, p["mu"][3]).astype(jnp.float32)
+    what = (p["w0"].astype(jnp.float32)
+            + jnp.tanh(wx @ p["wA"].astype(jnp.float32))
+            @ p["wB"].astype(jnp.float32))
+    # Clamp ŵ ≤ 0 so per-step log-decay ∈ [-1, 0): keeps the chunked form's
+    # exp(-cumsum) factors within f32 range (|cw| ≤ chunk).  Documented
+    # deviation: decays faster than 1/e per token are saturated.
+    logw = -jnp.exp(jnp.clip(what, -20.0, 0.0))
+    return r, k, v, g, logw
+
+
+def _heads(x, h, dh):
+    return x.reshape(x.shape[0], x.shape[1], h, dh).transpose(0, 2, 1, 3)
+
+
+def apply_rwkv_time_mix(p, x, cfg: ModelConfig, cache=None, chunk: int = 64):
+    B, S, D = x.shape
+    h, dh = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    x_prev = _token_shift(x, None if cache is None else cache["x_tm"])
+    r, k, v, g, logw = _time_mix_qkvwg(p, x, x_prev)
+    rh, kh, vh = (_heads(t, h, dh) for t in (r, k, v))
+    wh = _heads(logw, h, dh)
+    s0 = None if cache is None else cache["s"]
+    out, s_fin = wkv6_chunked(rh, kh, vh, wh, p["u"].astype(jnp.float32),
+                              s0=s0, chunk=chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, D)
+    # per-head group norm then gate
+    out = layers.apply_norm({"scale": p["ln_scale"], "bias": p["ln_bias"]},
+                            out.astype(x.dtype), "layernorm")
+    out = out * jax.nn.silu(g)
+    y = jnp.einsum("bsd,df->bsf", out, p["w_o"].astype(x.dtype))
+    if cache is None:
+        return y
+    return y, {"s": s_fin, "x_tm": x[:, -1]}
+
+
+def apply_rwkv_time_mix_decode(p, x, cache, cfg: ModelConfig):
+    B, _, D = x.shape
+    h, dh = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    x_prev = cache["x_tm"][:, None]
+    r, k, v, g, logw = _time_mix_qkvwg(p, x, x_prev)
+    rh = r.reshape(B, h, dh)
+    kh = k.reshape(B, h, dh)
+    vh = v.reshape(B, h, dh)
+    wh = logw.reshape(B, h, dh)
+    out, s_new = wkv6_step(rh, kh, vh, wh, p["u"].astype(jnp.float32),
+                           cache["s"])
+    out = out.reshape(B, 1, D)
+    out = layers.apply_norm({"scale": p["ln_scale"], "bias": p["ln_bias"]},
+                            out.astype(x.dtype), "layernorm")
+    out = out * jax.nn.silu(g)
+    y = jnp.einsum("bsd,df->bsf", out, p["w_o"].astype(x.dtype))
+    return y, {"s": s_new, "x_tm": x[:, -1]}
+
+
+def apply_channel_mix(p, x, cfg: ModelConfig, cache_x=None):
+    """RWKV channel mix (relu² FFN with token shift). Returns (y, x_last)."""
+    x_prev = _token_shift(x, cache_x)
+    xk = _mix(x, x_prev, p["mu"][0])
+    xr = _mix(x, x_prev, p["mu"][1])
+    dt = x.dtype
+    kk = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(dt)))
+    return rr * vv, x[:, -1]

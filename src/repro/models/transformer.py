@@ -1,0 +1,322 @@
+"""Generic block-stack model covering all assigned architectures.
+
+The layer stack is ``pattern_unit`` repeated ``num_units`` times via
+``jax.lax.scan`` over stacked parameters (keeps the HLO size O(unit), not
+O(layers) — essential for the 64-layer/1T-param dry-runs), plus an explicit
+tail for patterns that do not divide the layer count (recurrentgemma's 26 = 8
+× (R,R,A) + (R,R)).
+
+Three entry points:
+  * ``forward``        — full-sequence logits (training / encoder).
+  * ``prefill``        — forward + build per-layer caches (serving).
+  * ``decode_step``    — one token against the caches (serving decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, RWKV6, ModelConfig
+from repro.core.famous import FamousConfig
+from repro.models import attention, layers, moe, rglru, rwkv6
+from repro.models.module import ParamSpec, stack_specs
+from repro.parallel.incontext import constrain_residual
+
+# ---------------------------------------------------------------------------
+# parameter spec
+# ---------------------------------------------------------------------------
+
+
+def _ffn_spec(cfg: ModelConfig):
+    if cfg.num_experts:
+        return moe.moe_spec(cfg)
+    gated = cfg.act in ("silu", "gelu") and cfg.norm == "rmsnorm"
+    return layers.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, gated=gated)
+
+
+def block_spec(kind: str, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    if kind in (ATTN, LOCAL_ATTN):
+        return {
+            "ln1": layers.norm_spec(d, cfg.norm),
+            "attn": attention.attn_spec(cfg),
+            "ln2": layers.norm_spec(d, cfg.norm),
+            "ffn": _ffn_spec(cfg),
+        }
+    if kind == RGLRU:
+        return {
+            "ln1": layers.norm_spec(d, cfg.norm),
+            "rec": rglru.rglru_spec(cfg),
+            "ln2": layers.norm_spec(d, cfg.norm),
+            "ffn": _ffn_spec(cfg),
+        }
+    if kind == RWKV6:
+        return {
+            "ln1": layers.norm_spec(d, cfg.norm),
+            "tm": rwkv6.rwkv6_spec(cfg),
+            "ln2": layers.norm_spec(d, cfg.norm),
+            "cm": rwkv6.channel_mix_spec(cfg),
+        }
+    raise ValueError(kind)
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    unit = {f"pos{i}": block_spec(k, cfg) for i, k in enumerate(cfg.pattern_unit)}
+    spec: dict[str, Any] = {
+        "embed": layers.embed_spec(cfg.vocab_size, cfg.d_model),
+        "blocks": stack_specs(unit, cfg.num_units),
+        "final_norm": layers.norm_spec(cfg.d_model, cfg.norm),
+    }
+    for i, k in enumerate(cfg.tail_layers):
+        spec[f"tail{i}"] = block_spec(k, cfg)
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = {
+            "w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                           scale=0.02)
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn(p, x, cfg: ModelConfig):
+    if cfg.num_experts:
+        return moe.apply_moe(p, x, cfg)
+    return layers.apply_mlp(p, x, cfg.act)
+
+
+def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig,
+                fcfg: FamousConfig, q_offset: int = 0) -> jax.Array:
+    n = functools.partial(layers.apply_norm, kind=cfg.norm)
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.window if kind == LOCAL_ATTN else 0
+        x = constrain_residual(x, cfg.num_heads)
+        x = x + attention.apply_attn(p["attn"], n(p["ln1"], x), cfg, fcfg,
+                                     window=window, q_offset=q_offset)
+        x = constrain_residual(x, cfg.num_heads)
+        h = constrain_residual(n(p["ln2"], x), cfg.num_heads)
+        return x + constrain_residual(_apply_ffn(p["ffn"], h, cfg),
+                                      cfg.num_heads)
+    if kind == RGLRU:
+        x = x + rglru.apply_rglru(p["rec"], n(p["ln1"], x), cfg)
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg)
+    if kind == RWKV6:
+        x = x + rwkv6.apply_rwkv_time_mix(p["tm"], n(p["ln1"], x), cfg)
+        y, _ = rwkv6.apply_channel_mix(p["cm"], n(p["ln2"], x), cfg)
+        return x + y
+    raise ValueError(kind)
+
+
+def _embed_inputs(params, inputs, cfg: ModelConfig, dtype):
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        return layers.embed_lookup(params["embed"], inputs, dtype)
+    return inputs.astype(dtype)  # frontend stub: precomputed embeddings
+
+
+def _remat_policy(cfg: ModelConfig):
+    """§Perf iteration K3 (REFUTED, kept for the record): saving the MoE
+    expert-FFN intermediates under save_only_these_names did not remove the
+    backward's expert-weight all-gathers (XLA re-gathers for dbuf/dW anyway)
+    and cost +36 GiB/device of saved activations — policy disabled."""
+    return None
+
+
+def forward(params: dict, inputs: jax.Array, cfg: ModelConfig,
+            fcfg: FamousConfig = FamousConfig(), *, remat: bool = True,
+            return_hidden: bool = False, compute_dtype=None) -> jax.Array:
+    """inputs: int tokens (B, S) or float embeddings (B, S, D) for stub
+    frontends.  Returns float32 logits (B, S, vocab) — or the final hidden
+    states (B, S, D) when ``return_hidden`` (the chunked-CE loss computes
+    logits tile-by-tile to avoid materialising the full logit tensor)."""
+    x = _embed_inputs(params, inputs, cfg,
+                      compute_dtype or params["final_norm"]["scale"].dtype)
+
+    def unit_body(x, unit_params):
+        for i, kind in enumerate(cfg.pattern_unit):
+            x = apply_block(kind, unit_params[f"pos{i}"], x, cfg, fcfg)
+        return x
+
+    body = (jax.checkpoint(unit_body, policy=_remat_policy(cfg))
+            if remat else unit_body)
+    x, _ = jax.lax.scan(lambda c, p: (body(c, p), None), x, params["blocks"])
+    for i, kind in enumerate(cfg.tail_layers):
+        x = apply_block(kind, params[f"tail{i}"], x, cfg, fcfg)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x
+    return logits_fn(params, x, cfg)
+
+
+def logits_fn(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return layers.unembed_logits(params["embed"], x)
+    return jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                      params["lm_head"]["w"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int, dtype,
+                 shapes_only: bool = False):
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.window if kind == LOCAL_ATTN else 0
+        fn = attention.attn_cache_shape if shapes_only else attention.make_attn_cache
+        return fn(cfg, batch, max_seq, window, dtype)
+    if kind == RGLRU:
+        fn = rglru.rglru_cache_shape if shapes_only else rglru.make_rglru_cache
+        return fn(cfg, batch, dtype)
+    if kind == RWKV6:
+        fn = rwkv6.rwkv_cache_shape if shapes_only else rwkv6.make_rwkv_cache
+        return fn(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _stack_cache_tree(unit_caches: dict, n: int, shapes_only: bool):
+    """Replicate a unit's cache tree n times along a leading scan dim."""
+    if shapes_only:
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), unit_caches)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), unit_caches)
+
+
+def make_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype,
+                shapes_only: bool = False) -> dict:
+    unit = {f"pos{i}": _block_cache(k, cfg, batch, max_seq, dtype, shapes_only)
+            for i, k in enumerate(cfg.pattern_unit)}
+    caches: dict[str, Any] = {
+        "blocks": _stack_cache_tree(unit, cfg.num_units, shapes_only)}
+    for i, k in enumerate(cfg.tail_layers):
+        caches[f"tail{i}"] = _block_cache(k, cfg, batch, max_seq, dtype,
+                                          shapes_only)
+    return caches
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    def block_axes(kind):
+        if kind in (ATTN, LOCAL_ATTN):
+            return attention.ATTN_CACHE_AXES
+        if kind == RGLRU:
+            return rglru.RGLRU_CACHE_AXES
+        return rwkv6.RWKV_CACHE_AXES
+
+    unit = {f"pos{i}": block_axes(k) for i, k in enumerate(cfg.pattern_unit)}
+    stacked = jax.tree_util.tree_map(
+        lambda ax: (None,) + tuple(ax), unit,
+        is_leaf=lambda x: isinstance(x, tuple))
+    axes: dict[str, Any] = {"blocks": stacked}
+    for i, k in enumerate(cfg.tail_layers):
+        axes[f"tail{i}"] = block_axes(k)
+    return axes
+
+
+def _apply_block_prefill(kind, p, x, cache, cfg, fcfg):
+    n = functools.partial(layers.apply_norm, kind=cfg.norm)
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.window if kind == LOCAL_ATTN else 0
+        a, cache = attention.apply_attn_prefill(p["attn"], n(p["ln1"], x),
+                                                cache, cfg, fcfg, window=window)
+        x = x + a
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
+    if kind == RGLRU:
+        a, cache = rglru.apply_rglru(p["rec"], n(p["ln1"], x), cfg, cache)
+        x = x + a
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
+    if kind == RWKV6:
+        a, c_tm = rwkv6.apply_rwkv_time_mix(p["tm"], n(p["ln1"], x), cfg,
+                                            cache={k: cache[k] for k in
+                                                   ("s", "x_tm")})
+        x = x + a
+        h = n(p["ln2"], x)
+        y, x_cm = rwkv6.apply_channel_mix(p["cm"], h, cfg)
+        cache = {"s": c_tm["s"], "x_tm": c_tm["x_tm"], "x_cm": h[:, -1]}
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def _apply_block_decode(kind, p, x, cache, cache_len, cfg, fcfg):
+    n = functools.partial(layers.apply_norm, kind=cfg.norm)
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.window if kind == LOCAL_ATTN else 0
+        a, cache = attention.apply_attn_decode(p["attn"], n(p["ln1"], x),
+                                               cache, cache_len, cfg, fcfg,
+                                               window=window)
+        x = x + a
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
+    if kind == RGLRU:
+        a, cache = rglru.apply_rglru_decode(p["rec"], n(p["ln1"], x), cfg=cfg,
+                                            cache=cache)
+        x = x + a
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
+    if kind == RWKV6:
+        a, c_tm = rwkv6.apply_rwkv_time_mix_decode(
+            p["tm"], n(p["ln1"], x), {k: cache[k] for k in ("s", "x_tm")}, cfg)
+        x = x + a
+        h = n(p["ln2"], x)
+        y, _ = rwkv6.apply_channel_mix(p["cm"], h, cfg,
+                                       cache_x=cache["x_cm"])
+        cache = {"s": c_tm["s"], "x_tm": c_tm["x_tm"], "x_cm": h[:, -1]}
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def prefill(params, inputs, caches, cfg: ModelConfig,
+            fcfg: FamousConfig = FamousConfig(), compute_dtype=None):
+    """Returns (last-position logits (B, vocab), new caches)."""
+    dtype = compute_dtype or params["final_norm"]["scale"].dtype
+    x = _embed_inputs(params, inputs, cfg, dtype)
+
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern_unit):
+            key = f"pos{i}"
+            x, new_caches[key] = _apply_block_prefill(
+                kind, unit_params[key], x, unit_cache[key], cfg, fcfg)
+        return x, new_caches
+
+    x, new_block_caches = jax.lax.scan(
+        unit_body, x, (params["blocks"], caches["blocks"]))
+    new_caches = {"blocks": new_block_caches}
+    for i, kind in enumerate(cfg.tail_layers):
+        x, new_caches[f"tail{i}"] = _apply_block_prefill(
+            kind, params[f"tail{i}"], x, caches[f"tail{i}"], cfg, fcfg)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    return logits_fn(params, x[:, -1:], cfg)[:, 0], new_caches
+
+
+def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
+                fcfg: FamousConfig = FamousConfig(), compute_dtype=None):
+    """tokens: (B,) int32 (or (B, D) embeddings); cache_len: (B,).
+    Returns (logits (B, vocab), new caches)."""
+    dtype = compute_dtype or params["final_norm"]["scale"].dtype
+    inputs = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+    x = _embed_inputs(params, inputs, cfg, dtype)
+
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern_unit):
+            key = f"pos{i}"
+            x, new_caches[key] = _apply_block_decode(
+                kind, unit_params[key], x, unit_cache[key], cache_len, cfg, fcfg)
+        return x, new_caches
+
+    x, new_block_caches = jax.lax.scan(
+        unit_body, x, (params["blocks"], caches["blocks"]))
+    new_caches = {"blocks": new_block_caches}
+    for i, kind in enumerate(cfg.tail_layers):
+        x, new_caches[f"tail{i}"] = _apply_block_decode(
+            kind, params[f"tail{i}"], x, caches[f"tail{i}"], cache_len, cfg,
+            fcfg)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    return logits_fn(params, x, cfg)[:, 0], new_caches

@@ -1,0 +1,64 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+At 1000+-node scale the pod-interconnect (DCN or long ICI hops) is the
+scarcest bandwidth; gradients crossing it are compressed 4× (f32→int8,
+per-tensor symmetric scale) with an error-feedback residual so compression
+noise does not accumulate (Seide et al., Karimireddy et al.).
+
+Used by ``train_step`` when ``RunConfig.grad_compression`` is on and the mesh
+has a "pod" axis: gradients are reduced *within* a pod at full precision by
+the usual psum, then the pod-axis reduction runs through ``compressed_psum``
+under ``shard_map``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def compress(g: jax.Array, residual: jax.Array | None = None):
+    """f32 -> (int8, scale). Error feedback folds the residual in first."""
+    gf = g.astype(jnp.float32)
+    if residual is not None:
+        gf = gf + residual
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_residual = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_tree(grads, mesh, axis: str = "pod", residuals=None):
+    """All-reduce a gradient pytree over ``axis`` in int8 with error feedback.
+
+    Returns (mean-reduced grads, new residuals).  Must be called on values
+    sharded over ``axis`` (i.e. inside shard_map, or with grads replicated on
+    the other axes).
+    """
+    n = mesh.shape[axis]
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (0.0 if r is None else r)
+        # agree on a common scale first (a scalar pmax is ~free), so the
+        # int32 accumulation of int8 payloads is exact.
+        amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis)
+        scale = jnp.maximum(amax, 1e-20) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        return (total.astype(jnp.float32) * scale / n).astype(g.dtype), new_r
+
+    if residuals is None:
+        residuals = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_g, new_r

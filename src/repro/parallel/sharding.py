@@ -1,0 +1,178 @@
+"""Logical-axis sharding: map model-declared axis names onto mesh axes.
+
+Parallelism encoded by the default rules (DESIGN.md §4):
+  * DP   — "batch" over ("pod", "data"); the pod axis carries only data
+           parallelism + gradient reduction, so pod count scales elastically.
+  * TP   — heads / kv_heads / mlp / experts / vocab over "model" (Megatron).
+  * FSDP — the "embed" dim of weights over "data" (ZeRO-3; XLA all-gathers
+           one scanned layer at a time).
+  * EP   — "experts" over "model" (expert parallelism; all-to-all routing).
+
+Rules are a plain list so the §Perf hillclimb can swap them per-arch.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = dict[str, Any]
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    # attention-region batch: archs whose head count does not divide the
+    # model axis (qwen2 28H, llava 56H, recurrentgemma 10H) reshard the
+    # attention block to pure data parallelism over ALL mesh axes instead of
+    # replicating head compute 16x (see EXPERIMENTS.md §Perf, iteration Q1).
+    "batch_attn": ("pod", "data", "model"),
+    # context parallelism for the same fallback: query-sequence dim over the
+    # model axis (K/V replicated there; dK/dV all-reduce back) — keeps all
+    # 512 chips busy when batch alone cannot cover them (§Perf iteration Q2).
+    "seq_tp": "model",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_ff": "data",
+    "embed": "data",        # FSDP / ZeRO-3
+    "head_dim": None,
+    "layers": None,
+    "seq": None,
+}
+
+# Pure tensor-parallel rules (no FSDP) — small models where the all-gather
+# cost of ZeRO outweighs its memory win; a §Perf lever.
+TP_ONLY_RULES: Rules = {**DEFAULT_RULES, "embed": None}
+
+# ZeRO-3 + sequence sharding, no tensor parallelism (§Perf iteration Q7):
+# weights fully sharded over every mesh axis on their "embed" dim and
+# re-gathered per layer; tokens sharded (batch × seq); FFN/attention run with
+# zero per-layer all-reduces.  Wins for ≤~15B models where TP activation
+# all-reduces dominate (qwen2/deepseek at 1M-token steps); loses for ≥100B
+# where regathering the weights three times a step would swamp the ICI.
+ZERO_SEQ_RULES: Rules = {
+    **DEFAULT_RULES,
+    "embed": ("pod", "data", "model"),
+    "heads": None, "kv_heads": None, "heads_flat": None,
+    "mlp": None, "experts": None, "vocab": "model",
+}
+
+
+def _present(mesh: Mesh, axis) -> Any:
+    """Drop mesh axes the current mesh does not have (single-pod has no
+    "pod"); collapse empty tuples to None."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        return kept if kept else None
+    return axis if axis in mesh.axis_names else None
+
+
+def spec_for_axes(mesh: Mesh, axes: Sequence[Optional[str]],
+                  rules: Rules | None = None,
+                  shape: Sequence[int] | None = None) -> P:
+    """Resolve logical axes to a PartitionSpec.
+
+    When ``shape`` is given, dims that are not divisible by their mesh-axis
+    product fall back gracefully (try shorter prefixes of a tuple rule, then
+    replicate) — pjit in_shardings demand exact divisibility, and several
+    assigned configs have head counts (10/28/56) or vocab (504) that do not
+    divide the 16-way model axis.  The §Perf log tracks what this costs.
+    """
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used: set = set()
+
+    def axis_size(m) -> int:
+        if m is None:
+            return 1
+        if isinstance(m, tuple):
+            out = 1
+            for a in m:
+                out *= mesh.shape[a]
+            return out
+        return mesh.shape[m]
+
+    def usable(m):
+        """A mesh axis may appear only once in a PartitionSpec."""
+        if m is None:
+            return None
+        if isinstance(m, tuple):
+            kept = tuple(a for a in m if a not in used)
+            for a in kept:
+                used.add(a)
+            return kept if kept else None
+        if m in used:
+            return None
+        used.add(m)
+        return m
+
+    for i, name in enumerate(axes):
+        m = _present(mesh, rules.get(name)) if name else None
+        if m is not None and shape is not None:
+            cands = [m]
+            if isinstance(m, tuple):  # try shorter prefixes before giving up
+                cands = [m[:k] for k in range(len(m), 0, -1)]
+            m = None
+            for c in cands:
+                c = c if isinstance(c, tuple) else c
+                if shape[i] % axis_size(c) == 0:
+                    m = c if not isinstance(c, tuple) or len(c) > 1 else c[0]
+                    break
+        parts.append(usable(m))
+    return P(*parts)
+
+
+def sharding_for_axes(mesh: Mesh, axes: Sequence[Optional[str]],
+                      rules: Rules | None = None,
+                      shape: Sequence[int] | None = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for_axes(mesh, axes, rules, shape))
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, rules: Rules | None = None,
+                   shapes_tree=None):
+    """Map a tree of logical-axis tuples to NamedShardings.  ``shapes_tree``
+    (matching tree of ShapeDtypeStructs/arrays) enables divisibility-aware
+    fallback."""
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(
+            lambda axes: sharding_for_axes(mesh, axes, rules),
+            axes_tree, is_leaf=_is_axes_leaf)
+    flat_axes, treedef = jax.tree_util.tree_flatten(axes_tree,
+                                                    is_leaf=_is_axes_leaf)
+    flat_shapes = treedef.flatten_up_to(shapes_tree)
+    out = [sharding_for_axes(mesh, a, rules, tuple(s.shape))
+           for a, s in zip(flat_axes, flat_shapes)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sharding(mesh: Mesh, ndim: int, rules: Rules | None = None,
+                   shape: Sequence[int] | None = None) -> NamedSharding:
+    """Batch-leading activation sharding: (batch, ...) -> dp axes on dim 0."""
+    axes = ["batch"] + [None] * (ndim - 1)
+    return sharding_for_axes(mesh, axes, rules, shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,199 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms per (arch × shape × mesh), all in seconds *per device* (XLA SPMD
+modules are per-device programs, so ``cost_analysis()`` FLOPs/bytes are
+already per-chip — equivalent to the total/chips formulation):
+
+    compute    = HLO_FLOPs        / peak_FLOP/s
+    memory     = HLO_bytes        / HBM_bw
+    collective = collective_bytes / ICI_bw
+
+``collective_bytes`` is parsed from the optimized HLO: result shapes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, converted to *moved* bytes with a ring-algorithm model:
+
+    all-reduce      2 × bytes     (reduce-scatter + all-gather phases)
+    all-gather      1 × result    (each chip receives (N−1)/N ≈ 1 of result)
+    reduce-scatter  N × result    (input = N × result crosses the ring once)
+    all-to-all      1 × bytes
+    collective-permute 1 × bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+from repro.core.analytical import TpuSpec, V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every tensor shape in a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type moved bytes (per device) from HLO text."""
+    out: dict = defaultdict(float)
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        # strip -start/-done fusion suffixes (async collectives)
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLL_OPS:
+            continue
+        if op.endswith("-done"):
+            counts[base + "_done"] += 1
+            continue  # avoid double count with its -start
+        b = _shape_bytes(type_str)
+        n = _group_size(line)
+        if base == "all-reduce":
+            moved = 2.0 * b * max(n - 1, 0) / max(n, 1)
+        elif base == "all-gather":
+            moved = 1.0 * b * max(n - 1, 0) / max(n, 1)
+        elif base == "reduce-scatter":
+            moved = float(b) * max(n - 1, 0)
+        else:
+            moved = float(b)
+        out[base] += moved
+        out["raw_" + base] += b
+        counts[base] += 1
+    out["total_moved"] = sum(out[k] for k in _COLL_OPS if k in out)
+    out["counts"] = dict(counts)
+    return dict(out)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float            # per device
+    bytes_accessed: float   # per device
+    coll_bytes: float       # per device, moved
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_total: float
+    chips: int
+    coll_detail: dict
+    memory_per_device: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        hlo_total = self.flops * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the *useful* model FLOPs achieve when
+        running at the bound: (model_flops/chips/peak) / t_bound."""
+        if self.t_bound <= 0:
+            return 0.0
+        t_useful = self.model_flops_total / self.chips / V5E.peak_bf16
+        return t_useful / self.t_bound
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_accessed,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops_total": self.model_flops_total,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_per_device_gib": self.memory_per_device / 2**30,
+            "collectives": self.coll_detail.get("counts", {}),
+        }
+
+
+def analyse(arch: str, shape: str, mesh_name: str, *, cost: dict,
+            hlo_text: str, chips: int, model_flops_total: float,
+            memory_per_device: float = 0.0, hw: TpuSpec = V5E) -> Roofline:
+    """Roofline terms from the compiled HLO.
+
+    ``cost`` (XLA's cost_analysis) undercounts while-loop bodies (trip count
+    not applied), so FLOPs/bytes come from the while-aware HLO text model
+    (roofline/hlo_cost.py); the raw cost_analysis numbers are kept in the
+    dry-run JSON for reference.
+    """
+    from repro.roofline import hlo_cost
+
+    hc = hlo_cost.analyse_hlo(hlo_text)
+    flops = hc.flops
+    by = hc.bytes_accessed
+    moved = hc.coll_moved
+    coll = dict(hc.coll_by_type)
+    coll["counts"] = hc.coll_counts
+    coll["total_moved"] = moved
+    coll["while_trips"] = hc.while_trips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops=flops, bytes_accessed=by, coll_bytes=moved,
+        t_compute=flops / hw.peak_bf16,
+        t_memory=by / hw.hbm_bw,
+        t_collective=moved / hw.ici_bw,
+        model_flops_total=model_flops_total,
+        chips=chips, coll_detail=coll,
+        memory_per_device=memory_per_device,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per the assignment: 6·N·D train (N = active params for
+    MoE), 2·N·D prefill, 2·N·B decode (one token per sequence)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,157 @@
+"""Serving engine: slot-based continuous batching with shape-bucketed
+prefill — the runtime-programmability story (paper §IV-C) end to end.
+
+One decode executable (batch = n_slots, the synthesis-time maximum) serves
+every request mix; prefill compiles once per sequence-length *bucket*
+(pow-2 rounding, right-padded), so arbitrary request lengths reuse a handful
+of executables — the TPU analogue of "reprogram loop bounds from the µB,
+never re-synthesise".
+
+Bucket-padded prefill correctness: padded suffix tokens write junk K/V at
+positions ≥ n−1, but ``cache_len`` masks every future decode step to
+positions < len, and the next real token overwrites slot n−1.  (The logits
+of the prefill are discarded; generation restarts by decoding the last
+prompt token.)  Architectures with recurrent state (RG-LRU / RWKV), where
+junk tokens would pollute the carried state, prefill at exact length
+instead — the engine picks the strategy from the config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, LOCAL_ATTN, ModelConfig
+from repro.core.famous import FamousConfig
+from repro.core.flexible import next_pow2
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: list
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, fcfg: FamousConfig,
+                 n_slots: int = 4, max_seq: int = 256, dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.fcfg = fcfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.dtype = dtype
+        self.caches = transformer.make_caches(cfg, n_slots, max_seq, dtype)
+        self.cache_len = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.last_token = jnp.zeros((n_slots,), jnp.int32)
+        self._prefill_exec: dict[int, callable] = {}
+        self._decode = jax.jit(
+            functools.partial(transformer.decode_step, cfg=cfg, fcfg=fcfg))
+        # recurrent state cannot absorb junk pad tokens -> exact-length prefill
+        self.bucketed = all(k in (ATTN, LOCAL_ATTN) for k in cfg.pattern_unit)
+
+    # -- compiled helpers ---------------------------------------------------
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_exec:
+            def fn(params, tokens, caches, slot):
+                one = transformer.make_caches(self.cfg, 1, self.max_seq,
+                                              self.dtype)
+                _, one = transformer.prefill(params, tokens, one, self.cfg,
+                                             self.fcfg)
+
+                def write(axis):
+                    def w(buf, new):
+                        return jax.lax.dynamic_update_slice_in_dim(
+                            buf, new.astype(buf.dtype), slot, axis=axis)
+                    return w
+
+                # stacked block caches carry (num_units, batch, ...): the
+                # slot/batch axis is 1; tail caches carry (batch, ...).
+                out = {"blocks": jax.tree_util.tree_map(
+                    write(1), caches["blocks"], one["blocks"])}
+                for key in caches:
+                    if key != "blocks":
+                        out[key] = jax.tree_util.tree_map(
+                            write(0), caches[key], one[key])
+                return out
+
+            self._prefill_exec[length] = jax.jit(fn)
+        return self._prefill_exec[length]
+
+    @property
+    def prefill_compilations(self) -> int:
+        return len(self._prefill_exec)
+
+    # -- API ------------------------------------------------------------------
+    def add_request(self, req: Request) -> int:
+        slot = self.slot_req.index(None)
+        n = len(req.tokens)
+        assert 1 <= n <= self.max_seq
+        # prefill the first n-1 tokens; the n-th is decoded (writing its
+        # cache entry / recurrent-state update exactly once).
+        if n > 1:
+            m = n - 1
+            plen = min(next_pow2(m), self.max_seq) if self.bucketed else m
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, :m] = req.tokens[:m]
+            fn = self._prefill_fn(plen)
+            self.caches = fn(self.params, jnp.asarray(toks), self.caches,
+                             jnp.int32(slot))
+        else:  # nothing to prefill: clear any stale state in the slot
+            cleared = {"blocks": jax.tree_util.tree_map(
+                lambda b: b.at[:, slot].set(0), self.caches["blocks"])}
+            for key in self.caches:
+                if key != "blocks":
+                    cleared[key] = jax.tree_util.tree_map(
+                        lambda b: b.at[slot].set(0), self.caches[key])
+            self.caches = cleared
+        self.slot_req[slot] = req
+        # generation restarts at the last prompt token: it is re-decoded so
+        # its K/V (or recurrent-state) entry is written at position n-1.
+        self.cache_len = self.cache_len.at[slot].set(n - 1)
+        self.last_token = self.last_token.at[slot].set(req.tokens[-1])
+        return slot
+
+    def step(self):
+        """One batched decode step across all active slots."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        logits, self.caches = self._decode(self.params, self.last_token,
+                                           self.caches, self.cache_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        mask = jnp.asarray([r is not None for r in self.slot_req])
+        self.cache_len = self.cache_len + mask.astype(jnp.int32)
+        self.last_token = jnp.where(mask, next_tok, self.last_token)
+        finished = []
+        toks = np.asarray(next_tok)
+        for i in active:
+            req = self.slot_req[i]
+            req.out.append(int(toks[i]))
+            if len(req.out) >= req.max_new or int(self.cache_len[i]) >= self.max_seq - 1:
+                req.done = True
+                finished.append(req)
+                self.slot_req[i] = None
+                self.cache_len = self.cache_len.at[i].set(0)
+        return finished
+
+    def run(self, requests: list[Request], max_steps: int = 1000):
+        pending = list(requests)
+        done = []
+        steps = 0
+        while (pending or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            while pending and None in self.slot_req:
+                self.add_request(pending.pop(0))
+            done.extend(self.step())
+            steps += 1
+        return done

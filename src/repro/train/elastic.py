@@ -1,0 +1,43 @@
+"""Elastic scaling: resume a run on a different mesh (pod count change).
+
+Because (a) the "pod" axis carries only data parallelism, (b) checkpoints
+store full (unsharded) arrays per leaf, and (c) the data pipeline is
+stateless-deterministic in (seed, step), changing the pod count is just:
+build the new mesh, rebuild shardings from the same logical-axis tree, and
+``restore_checkpoint`` with the new shardings.  The global batch stays fixed
+(per-pod microbatch count changes), so training curves are reproducible
+across resizes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.parallel import sharding as shd
+from repro.train import checkpoint as ckpt_lib
+
+
+def reshard_restore(ckpt_dir: str, state_like, mesh, logical_axes_tree,
+                    rules=None, step: Optional[int] = None):
+    """Restore the latest checkpoint onto ``mesh`` (any pod count)."""
+    axes_shardings = shd.tree_shardings(mesh, logical_axes_tree, rules)
+    return ckpt_lib.restore_checkpoint(ckpt_dir, state_like, step=step,
+                                       shardings=axes_shardings)
+
+
+def validate_resize(old_mesh_shape: dict, new_mesh_shape: dict,
+                    global_batch: int) -> list[str]:
+    """Static checks before an elastic resize; returns problem list."""
+    problems = []
+    for ax in ("data", "model"):
+        if old_mesh_shape.get(ax) != new_mesh_shape.get(ax):
+            problems.append(
+                f"{ax} axis changed {old_mesh_shape.get(ax)} -> "
+                f"{new_mesh_shape.get(ax)}: TP/FSDP layout changes require "
+                "a full reshard (supported, but not transparent)")
+    dp = new_mesh_shape.get("data", 1) * new_mesh_shape.get("pod", 1)
+    if global_batch % dp:
+        problems.append(f"global batch {global_batch} not divisible by new "
+                        f"DP degree {dp}")
+    return problems

@@ -1,0 +1,56 @@
+"""Losses.  The LM loss computes logits in sequence chunks so the (B, S, V)
+tensor is never materialised — at vocab 256k × 1M tokens the full logit
+tensor would be ~0.5 TB in f32 globally; chunking caps the transient at
+(B, chunk, V) per device (a §Perf memory-term optimisation on by default)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def _ce_from_logits(logits: jax.Array, targets: jax.Array):
+    """logits: (..., V) f32; targets: (...) int32. Returns (sum_ce, sum_z2)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = lse - tgt
+    return jnp.sum(ce), jnp.sum(jnp.square(lse))
+
+
+def chunked_lm_loss(params, hidden: jax.Array, targets: jax.Array,
+                    cfg: ModelConfig, *, chunk: int = 512,
+                    z_loss: float = 0.0):
+    """hidden: (B, S, D); targets: (B, S). Mean next-token CE."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fallback: odd lengths take the unchunked path
+    n = S // chunk
+    hc = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)
+    tc = targets.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def step(acc, xs):
+        h, t = xs
+        logits = transformer.logits_fn(params, h, cfg)
+        ce, z2 = _ce_from_logits(logits, t)
+        return (acc[0] + ce, acc[1] + z2), None
+
+    (ce_sum, z2_sum), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                       (hc, tc))
+    n_tok = B * S
+    loss = ce_sum / n_tok
+    if z_loss:
+        loss = loss + z_loss * z2_sum / n_tok
+    return loss
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, fcfg, *,
+            remat: bool = True, chunk: int = 512, z_loss: float = 0.0,
+            compute_dtype=None):
+    hidden = transformer.forward(params, batch["inputs"], cfg, fcfg,
+                                 remat=remat, return_hidden=True,
+                                 compute_dtype=compute_dtype)
+    return chunked_lm_loss(params, hidden, batch["targets"], cfg,
+                           chunk=chunk, z_loss=z_loss)

@@ -1,0 +1,111 @@
+"""Training step: microbatched grad accumulation, clipping, AdamW, and the
+(optional) cross-pod compressed gradient reduction.
+
+The step is a pure function  (state, batch) -> (state, metrics)  suitable for
+``jax.jit`` with explicit in/out shardings; ``state_logical_axes`` gives the
+logical-axis tree the launcher maps to NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.famous import FamousConfig
+from repro.models import module, transformer
+from repro.optim import adamw
+from repro.train import losses
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool = True
+    loss_chunk: int = 512
+    z_loss: float = 0.0
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16   # bf16 activations/matmuls (mixed prec)
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    schedule_warmup: int = 100
+    schedule_total: int = 10000
+    grad_compression: bool = False   # int8 EF pod-axis reduction (shard_map)
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> dict:
+    spec = transformer.model_spec(cfg)
+    params = module.init_params(spec, key, tcfg.param_dtype)
+    return {"params": params,
+            "opt": adamw.init_opt_state(params, tcfg.optimizer),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shapes(cfg: ModelConfig, tcfg: TrainConfig) -> dict:
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    spec = transformer.model_spec(cfg)
+    p = module.param_shapes(spec, tcfg.param_dtype)
+    mdt = tcfg.optimizer.moment_dtype
+    mom = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p)
+    return {"params": p,
+            "opt": {"m": mom, "v": mom,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def state_logical_axes(cfg: ModelConfig) -> dict:
+    spec = transformer.model_spec(cfg)
+    axes = module.logical_axes(spec)
+    return {"params": axes, "opt": {"m": axes, "v": axes, "count": ()},
+            "step": ()}
+
+
+def make_train_step(cfg: ModelConfig, fcfg: FamousConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return losses.lm_loss(params, batch, cfg, fcfg, remat=tcfg.remat,
+                              chunk=tcfg.loss_chunk, z_loss=tcfg.z_loss,
+                              compute_dtype=tcfg.compute_dtype)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            return grad_fn(params, batch)
+        n = tcfg.microbatches
+
+        def split(x):
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def acc_step(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = grad_fn(params, mb)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, g), _ = jax.lax.scan(acc_step, (jnp.float32(0), zeros), micro)
+        inv = 1.0 / n
+        return loss * inv, jax.tree_util.tree_map(lambda x: x * inv, g)
+
+    def train_step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        lr_scale = adamw.cosine_schedule(
+            state["step"], warmup=tcfg.schedule_warmup,
+            total=tcfg.schedule_total)
+        new_params, new_opt, om = adamw.apply_updates(
+            state["params"], grads, state["opt"], tcfg.optimizer, lr_scale)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": om["grad_norm"],
+                   "lr_scale": lr_scale}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
+# only launch/dryrun.py sets the 512-device placeholder flag.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

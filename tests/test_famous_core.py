@@ -1,0 +1,138 @@
+"""FAMOUS core behaviour: the paper's invariants.
+
+* Algorithm 1 tiling invariance: the TS-tiled projection equals the untiled
+  one for every tile size (the paper's accumulation correctness).
+* impl agreement: reference / xla / pallas produce the same attention.
+* runtime programmability: one compiled FlexibleAttention program serves
+  smaller (h, SL, dh) topologies exactly (tests #1–#8 of Table I).
+* analytical model (paper §VII): latency decreases with larger tiles
+  (Table I tests #9–#10) and the TS sweep reproduces the paper's trend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analytical, famous, flexible, quant
+
+
+def _qkv_inputs(B=2, S=64, D=128, H=4, KV=2, dh=32):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (B, S, D)) * 0.5
+    wq = jax.random.normal(ks[1], (D, H, dh)) * 0.05
+    wk = jax.random.normal(ks[2], (D, KV, dh)) * 0.05
+    wv = jax.random.normal(ks[3], (D, KV, dh)) * 0.05
+    return x, wq, wk, wv
+
+
+@pytest.mark.parametrize("tile_d", [16, 32, 64, 128])
+def test_algorithm1_tiling_invariance(tile_d):
+    x, wq, wk, wv = _qkv_inputs()
+    q0, k0, v0 = famous.qkv_projection_xla(x, wq, wk, wv)
+    q1, k1, v1 = famous.qkv_projection_reference(x, wq, wk, wv, tile_d=tile_d)
+    for a, b in [(q0, q1), (k0, k1), (v0, v1)]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["reference", "xla", "pallas"])
+@pytest.mark.parametrize("causal", [True, False])
+def test_impl_agreement(impl, causal):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 32)) * 0.5
+    k = jax.random.normal(ks[1], (2, 256, 2, 32)) * 0.5
+    v = jax.random.normal(ks[2], (2, 256, 2, 32)) * 0.5
+    ref = famous.attention_reference(q, k, v, causal=causal)
+    cfg = famous.FamousConfig(impl=impl, tile_q=128, tile_k=128)
+    out = famous.attention(q, k, v, causal=causal, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+def test_flexible_attention_one_executable_many_topologies():
+    """Paper §IV-C: vary h / SL / d_head at runtime without recompiling."""
+    fa = flexible.FlexibleAttention(max_heads=8, max_seq=128, max_head_dim=64,
+                                    causal=True)
+    for (H, S, dh) in [(8, 128, 64), (4, 128, 64), (2, 64, 64), (8, 128, 32),
+                       (3, 96, 16)]:
+        ks = jax.random.split(jax.random.PRNGKey(S + H + dh), 3)
+        q = jax.random.normal(ks[0], (2, S, H, dh)) * 0.5
+        k = jax.random.normal(ks[1], (2, S, H, dh)) * 0.5
+        v = jax.random.normal(ks[2], (2, S, H, dh)) * 0.5
+        out = fa(q, k, v)
+        ref = famous.attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, err_msg=f"{(H, S, dh)}")
+    # one executable: jit cache of fa._fn has exactly one entry
+    assert fa._fn._cache_size() == 1
+
+
+def test_decode_attention_masks_by_cache_len():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 16)) * 0.5
+    kc = jax.random.normal(ks[1], (2, 32, 4, 16)) * 0.5
+    vc = jax.random.normal(ks[2], (2, 32, 4, 16)) * 0.5
+    clen = jnp.array([5, 32], jnp.int32)
+    out = famous.decode_attention(q, kc, vc, clen)
+    # manual: attend only to the first clen entries
+    ref0 = famous.attention_reference(q[:1], kc[:1, :5], vc[:1, :5],
+                                      causal=False)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref0[0]),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# analytical model (§VII)
+# ---------------------------------------------------------------------------
+
+def test_analytical_latency_tile_trend():
+    """Table I tests #9-#10: smaller tiles -> more reload iterations ->
+    higher latency. The TPU model must reproduce the trend."""
+    lats = []
+    for ts in (128, 256, 512):
+        lat = analytical.mha_latency(batch=1, seq=4096, heads=16, kv_heads=16,
+                                     head_dim=128, d_model=2048,
+                                     tile_q=ts, tile_k=ts, tile_d=ts)
+        lats.append(lat.total)
+    assert lats[0] >= lats[1] >= lats[2], lats
+
+
+def test_analytical_flops_match_paper_gop():
+    """The model's FLOP count equals the paper's GOP definition."""
+    seq, d_model, heads = 64, 768, 8
+    lat = analytical.mha_latency(batch=1, seq=seq, heads=heads,
+                                 kv_heads=heads, head_dim=d_model // heads,
+                                 d_model=d_model, tile_q=64, tile_k=64,
+                                 tile_d=64)
+    paper = analytical.paper_gops(seq=seq, d_model=d_model, heads=heads)
+    # model adds softmax VPU flops; matmul part must match exactly
+    matmul_flops = sum(
+        m.flops for m in lat.modules) - 6.0 * heads * seq * seq
+    assert abs(matmul_flops - paper * 1e9) / (paper * 1e9) < 0.01
+
+
+def test_autotuner_respects_vmem():
+    res = analytical.autotune_tiles(batch=1, seq=8192, heads=8, kv_heads=8,
+                                    head_dim=128, d_model=1024)
+    assert analytical.fits_vmem(res["latency"])
+    tiles = res["tiles"]
+    assert all(t % 128 == 0 for t in tiles.values())  # MXU-aligned
+
+
+# ---------------------------------------------------------------------------
+# 8-bit quantization (paper's fixed point)
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 128))
+    q, s = quant.quantize(x, axis=-1)
+    err = jnp.abs(quant.dequantize(q, s) - x)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert float((err <= amax / 127.0 * 0.5 + 1e-6).mean()) == 1.0
+
+
+def test_int8_einsum_close_to_f32():
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 32, 64))
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 4, 16)) * 0.05
+    out8 = quant.int8_einsum("...sd,dhe->...she", x, w, out_dtype=jnp.float32)
+    ref = jnp.einsum("bsd,dhe->bshe", x, w)
+    rel = float(jnp.abs(out8 - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 0.05, rel

@@ -1,0 +1,163 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import famous, quant
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.configs.base import get_config, shrink
+from repro.serve.engine import next_pow2
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3), st.sampled_from([32, 64, 128]),
+       st.sampled_from([1, 2, 4]), st.sampled_from([8, 16]),
+       st.booleans(), st.integers(0, 3))
+def test_flash_equals_reference(B, S, H, dh, causal, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh)) * 0.7
+    k = jax.random.normal(ks[1], (B, S, H, dh)) * 0.7
+    v = jax.random.normal(ks[2], (B, S, H, dh)) * 0.7
+    out = famous.attention_xla(q, k, v, causal=causal, block_k=32)
+    ref = famous.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 5))
+def test_attention_rows_are_convex_combinations(seed):
+    """Each output row lies in the convex hull of V rows => bounded by
+    per-column min/max of V (softmax weights sum to 1)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 8))
+    k = jax.random.normal(ks[1], (1, 32, 2, 8))
+    v = jax.random.normal(ks[2], (1, 32, 2, 8))
+    out = famous.attention_reference(q, k, v, causal=False)
+    lo = v.min(axis=1, keepdims=True) - 1e-5
+    hi = v.max(axis=1, keepdims=True) + 1e-5
+    assert bool(((out >= lo) & (out <= hi)).all())
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 5), st.sampled_from([16, 64]))
+def test_causal_prefix_invariance(seed, S):
+    """Causality: logits at position t do not depend on tokens > t."""
+    cfg = shrink(get_config("qwen2-7b"))
+    from repro.models import module, transformer
+    params = module.init_params(transformer.model_spec(cfg),
+                                jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (1, S), 0,
+                              cfg.vocab_size)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 7) % cfg.vocab_size)
+    l1 = transformer.forward(params, toks, cfg, remat=False)
+    l2 = transformer.forward(params, toks2, cfg, remat=False)
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                               np.asarray(l2[:, :-1]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantization invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10), st.sampled_from([(4, 16), (8, 8), (1, 64)]))
+def test_quantize_bounds_and_scale_recovery(seed, shape):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * \
+        (10.0 ** (seed % 4 - 2))
+    q, s = quant.quantize(x, axis=-1)
+    assert int(jnp.abs(q.astype(jnp.int32)).max()) <= 127
+    err = jnp.abs(quant.dequantize(q, s) - x)
+    assert bool((err <= s * 0.5 + 1e-9).all())
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 5), st.sampled_from([(8, 2), (4, 1), (16, 4)]),
+       st.floats(1.0, 2.0))
+def test_router_dispatch_invariants(seed, ek, cf):
+    E, K = ek
+    G, S = 2, 32
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (G, S, E))
+    dispatch, combine, aux = moe_lib.router_dispatch(logits, K, cf)
+    d = np.asarray(dispatch, np.float32)
+    c = np.asarray(combine, np.float32)
+    # each (expert, slot) pair holds at most one token
+    assert d.sum(axis=1).max() <= 1.0 + 1e-6
+    # each token occupies at most K slots, combine weights sum to <= 1
+    assert d.sum(axis=(2, 3)).max() <= K + 1e-6
+    assert c.sum(axis=(2, 3)).max() <= 1.0 + 1e-5
+    assert c.min() >= 0.0
+    # aux loss is >= 1 (perfect balance) up to estimator noise
+    assert float(aux) > 0.5
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 3))
+def test_moe_capacity_drop_monotone(seed):
+    """Higher capacity factor can only reduce dropped tokens."""
+    E, K, G, S = 8, 2, 2, 64
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (G, S, E))
+    kept = []
+    for cf in (0.5, 1.0, 2.0):
+        d, _, _ = moe_lib.router_dispatch(logits, K, cf)
+        kept.append(float(np.asarray(d).sum()))
+    assert kept[0] <= kept[1] <= kept[2]
+
+
+# ---------------------------------------------------------------------------
+# recurrence invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 5))
+def test_rglru_associative_scan_matches_sequential(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    B, S, R = 2, 48, 16
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, R)))
+    b = jax.random.normal(ks[1], (B, S, R)) * 0.3
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h_assoc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    from repro.kernels.scan.ref import rglru_reference
+    h_seq = rglru_reference(a, b)
+    np.testing.assert_allclose(np.asarray(h_assoc), np.asarray(h_seq),
+                               atol=1e-5, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 5))
+def test_rglru_decay_bounded(seed):
+    """|h_t| stays bounded when |b| bounded and a in (0,1): BIBO stability."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (1, 256, 8)))
+    b = jnp.clip(jax.random.normal(ks[1], (1, 256, 8)), -1, 1) * (1 - a)
+    from repro.kernels.scan.ref import rglru_reference
+    h = rglru_reference(a, b)
+    assert float(jnp.abs(h).max()) <= 1.0 + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 10_000))
+def test_next_pow2(n):
+    b = next_pow2(n)
+    assert b >= n and b & (b - 1) == 0
+    assert b < 2 * max(n, 2)

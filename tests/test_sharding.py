@@ -1,0 +1,75 @@
+"""Sharding-rule resolution: divisibility fallbacks, axis dedup, dp prefix
+shrinking, tree mapping.  Uses AbstractMesh so 16-way axes can be tested on
+a 1-device host (spec resolution only reads names/sizes)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.parallel import sharding as shd
+
+MESH2 = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _real_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_spec_basic():
+    assert shd.spec_for_axes(MESH2, ("embed", "mlp")) == P("data", "model")
+
+
+def test_divisibility_fallback_drops_axis():
+    # hubert vocab 504 is not divisible by the 16-way model axis
+    spec = shd.spec_for_axes(MESH2, ("vocab", "embed"), shape=(504, 1280))
+    assert spec == P(None, "data")
+
+
+def test_heads_fallback():
+    # qwen2's 28 heads don't divide 16 -> replicate; embed still FSDP-sharded
+    spec = shd.spec_for_axes(MESH2, ("embed", "heads", "head_dim"),
+                             shape=(3584, 28, 128))
+    assert spec == P("data", None, None)
+    # command-r's 96 heads do divide
+    spec = shd.spec_for_axes(MESH2, ("embed", "heads", "head_dim"),
+                             shape=(12288, 96, 128))
+    assert spec == P("data", "model", None)
+
+
+def test_tuple_prefix_fallback():
+    # batch 2 on a (pod=2, data=16) dp tuple -> falls back to ("pod",)
+    spec = shd.spec_for_axes(MESH3, ("batch", None), shape=(2, 8))
+    assert spec == P(("pod",), None) or spec == P("pod", None)
+    # batch 1 -> fully replicated
+    spec = shd.spec_for_axes(MESH3, ("batch", None), shape=(1, 8))
+    assert spec == P(None, None)
+    # batch 256 -> full dp tuple
+    spec = shd.spec_for_axes(MESH3, ("batch", None), shape=(256, 8))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_axis_used_once():
+    spec = shd.spec_for_axes(MESH2, ("mlp", "heads"), shape=(256, 32))
+    assert spec == P("model", None)
+
+
+def test_missing_mesh_axis_dropped():
+    spec = shd.spec_for_axes(MESH2, ("batch",), shape=(256,))
+    assert spec == P("data")  # no "pod" on the single-pod mesh
+
+
+def test_tree_shardings_with_shapes():
+    mesh = _real_mesh()
+    axes_tree = {"w": ("embed", "mlp"), "b": ("mlp",)}
+    shapes = {"w": jax.ShapeDtypeStruct((64, 128), jnp.float32),
+              "b": jax.ShapeDtypeStruct((128,), jnp.float32)}
+    out = shd.tree_shardings(mesh, axes_tree, None, shapes)
+    assert out["w"].spec == P("data", "model")
+    assert out["b"].spec == P("model")
+
+
+def test_dp_helpers():
+    assert shd.dp_axes(MESH3) == ("pod", "data")
+    assert shd.dp_size(MESH3) == 32
+    assert shd.dp_size(MESH2) == 16
