@@ -37,6 +37,34 @@ def run():
     us = common.timeit(attn, q, k, v)
     common.emit("kernels/attention_xla_flash", us, "")
 
+    # ---- fwd+bwd (training path): flash custom-VJP, XLA vs Pallas --------
+    # The Pallas path runs in interpret mode off-TPU, so it gets a smaller
+    # topology — this benchmarks the kernel *plumbing* (fwd + dq + dk/dv
+    # custom VJP) on CPU; a real-TPU run exercises the compiled kernels.
+    Bg, Sg, Hg, KVg, dhg = 1, 512, 4, 2, 64
+    kg = jax.random.split(jax.random.PRNGKey(1), 4)
+    qg = jax.random.normal(kg[0], (Bg, Sg, Hg, dhg), jnp.float32) * 0.5
+    kk = jax.random.normal(kg[1], (Bg, Sg, KVg, dhg), jnp.float32) * 0.5
+    vg = jax.random.normal(kg[2], (Bg, Sg, KVg, dhg), jnp.float32) * 0.5
+    ct = jax.random.normal(kg[3], (Bg, Sg, Hg, dhg), jnp.float32)
+
+    def make_loss(icfg):
+        def loss(q, k, v):
+            out = famous.attention(q, k, v, causal=True, cfg=icfg)
+            return jnp.sum(out * ct)
+        return jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+
+    grad_xla = make_loss(famous.FamousConfig(impl="xla", tile_k=128))
+    us = common.timeit(grad_xla, qg, kk, vg)
+    common.emit("kernels/attention_fwd_bwd_xla", us,
+                f"shape={Bg}x{Sg}x{Hg}x{dhg};gqa={Hg//KVg}")
+
+    grad_pl = make_loss(famous.FamousConfig(impl="pallas", tile_q=128,
+                                            tile_k=128))
+    us = common.timeit(grad_pl, qg, kk, vg, warmup=1, iters=3)
+    common.emit("kernels/attention_fwd_bwd_pallas_interpret", us,
+                f"shape={Bg}x{Sg}x{Hg}x{dhg};gqa={Hg//KVg}")
+
     lat = analytical.mha_latency(batch=B, seq=SL, heads=H, kv_heads=H,
                                  head_dim=dh, d_model=D)
     for m in lat.modules:

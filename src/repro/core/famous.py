@@ -22,8 +22,13 @@ This module provides three interchangeable implementations of the same math:
                     by training, serving and the multi-pod dry-run.
   impl="pallas"     hand-written Pallas TPU kernels (kernels/qkv, kernels/
                     attention) with BlockSpec VMEM tiling — the TS analogue is
-                    the (block_q, block_k, block_d) triple.  Validated in
-                    interpret mode on CPU; selected on real TPU backends.
+                    the (block_q, block_k, block_d) triple.  Trainable: the
+                    attention kernel carries a flash custom-VJP whose dq and
+                    dk/dv passes are themselves Pallas kernels (blockwise
+                    recompute from the saved LSE, mirroring _flash_bwd_rule
+                    below), and the QKV matmul kernel differentiates through
+                    itself.  Validated in interpret mode on CPU; selected on
+                    real TPU backends.
 
 GQA extends the paper (which is pure MHA): K/V heads are broadcast to query
 heads inside the QK/SV modules, mirroring how FAMOUS shares K BRAMs across PE
@@ -316,6 +321,8 @@ def attention(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
         return attention_reference(q, k, v, causal=causal, window=window,
                                    scale=scale, q_offset=q_offset)
     if cfg.impl == "pallas":
+        # Fully Pallas path (fwd + custom-VJP bwd kernels); tile_q/tile_k are
+        # clamped to the sequence lengths inside the wrapper.
         from repro.kernels.attention import ops as attn_ops
         return attn_ops.mha(q, k, v, causal=causal, window=window, scale=scale,
                             q_offset=q_offset, block_q=cfg.tile_q,

@@ -45,6 +45,10 @@ class FlexibleAttention:
 
     def _padded_attention(self, q, k, v, seq_len, head_dim):
         # q,k,v: (B, max_seq, max_heads, max_head_dim) zero-padded.
+        # Tracing happens exactly once per compiled executable, so this
+        # python-side counter counts compilations; the paper-faithful
+        # single-program claim is that it stays at 1 across topologies.
+        self.compilations += 1
         scale = 1.0 / jnp.sqrt(head_dim.astype(jnp.float32))
         kpos = jnp.arange(self.max_seq)
         qpos = jnp.arange(self.max_seq)
@@ -99,4 +103,5 @@ class BucketCache:
 
 
 def next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 1).bit_length()
+    """Smallest power of two >= n (next_pow2(1) == 1)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()

@@ -17,7 +17,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat as pc
 
 NEG_INF = -1e30
 
@@ -81,7 +82,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda b, ik: (b, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=pc.SMEM),
             pl.BlockSpec((1, group, dh), lambda b, ik: (b, 0, 0)),
             pl.BlockSpec((1, block_k, dh), lambda b, ik: (b, ik, 0)),
             pl.BlockSpec((1, block_k, dh), lambda b, ik: (b, ik, 0)),
@@ -89,11 +90,10 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
         out_specs=pl.BlockSpec((1, group, dh), lambda b, ik: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((BKV, group, dh), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((group, dh), jnp.float32),
-            pltpu.VMEM((group, 1), jnp.float32),
-            pltpu.VMEM((group, 1), jnp.float32),
+            pc.VMEM((group, dh), jnp.float32),
+            pc.VMEM((group, 1), jnp.float32),
+            pc.VMEM((group, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=pc.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(lens, q, k_cache, v_cache)

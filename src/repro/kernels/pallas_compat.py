@@ -1,0 +1,44 @@
+"""Pallas TPU API compatibility layer across jax versions.
+
+The Pallas TPU surface was renamed between jax 0.4.x and 0.5+:
+
+===========================  =================================
+jax 0.4.x                    jax 0.5+
+===========================  =================================
+``pltpu.TPUCompilerParams``  ``pltpu.CompilerParams``
+``pltpu.TPUMemorySpace``     ``pltpu.MemorySpace``
+===========================  =================================
+
+Every kernel family (attention, qkv, decode, scan) imports the resolved
+names from here instead of reaching into ``pltpu`` directly, so the same
+kernel source runs on either jax line.  ``pltpu.VMEM(shape, dtype)``
+scratch constructors and the ``dimension_semantics`` kwarg spelling are
+stable across both lines and are re-exported for uniformity.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# --- compiler params -------------------------------------------------------
+# 0.5+ name first: on those versions TPUCompilerParams still exists but is a
+# deprecated alias that warns.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# --- memory spaces ---------------------------------------------------------
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+SMEM = MemorySpace.SMEM
+ANY = MemorySpace.ANY
+
+# VMEM is both a memory space and (called with (shape, dtype)) a scratch-
+# buffer constructor on every supported jax; keep the pltpu object.
+VMEM = pltpu.VMEM
+
+
+def compiler_params(*dimension_semantics: str, **kwargs):
+    """Build compiler params with the given per-grid-dim semantics.
+
+    ``compiler_params("parallel", "arbitrary")`` is the common call; extra
+    kwargs (``vmem_limit_bytes`` etc.) pass through unchanged.
+    """
+    return CompilerParams(dimension_semantics=tuple(dimension_semantics),
+                          **kwargs)

@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat as pc
 
 
 def _proj_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
@@ -57,9 +58,7 @@ def _proj_kernel_int8(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
         o_ref[...] = deq.astype(o_ref.dtype)
 
 
-def matmul_tiled(x, w, *, block_t: int = 256, block_f: int = 256,
-                 block_d: int = 512, out_dtype=None,
-                 interpret: bool = False):
+def _matmul_call(x, w, block_t, block_f, block_d, out_dtype, interpret):
     """x: (T, D) @ w: (D, F) -> (T, F), reduction-tiled (TS = block_d)."""
     T, D = x.shape
     _, F = w.shape
@@ -78,11 +77,41 @@ def matmul_tiled(x, w, *, block_t: int = 256, block_f: int = 256,
         ],
         out_specs=pl.BlockSpec((block_t, block_f), lambda it, jf, kd: (it, jf)),
         out_shape=jax.ShapeDtypeStruct((T, F), out_dtype or x.dtype),
-        scratch_shapes=[pltpu.VMEM((block_t, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        scratch_shapes=[pc.VMEM((block_t, block_f), jnp.float32)],
+        compiler_params=pc.compiler_params("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _matmul_vjp(x, w, block_t, block_f, block_d, out_dtype, interpret):
+    return _matmul_call(x, w, block_t, block_f, block_d, out_dtype, interpret)
+
+
+def _matmul_vjp_fwd(x, w, block_t, block_f, block_d, out_dtype, interpret):
+    return _matmul_vjp(x, w, block_t, block_f, block_d, out_dtype,
+                       interpret), (x, w)
+
+
+def _matmul_vjp_bwd(block_t, block_f, block_d, out_dtype, interpret, res, g):
+    # The backward of a matmul is two matmuls — run them through the same
+    # tiled kernel, with the block roles permuted to follow each operand's
+    # dims: dX = g·Wᵀ is (T,F)@(F,D); dW = Xᵀ·g is (D,T)@(T,F).
+    x, w = res
+    dx = _matmul_call(g, w.T, block_t, block_d, block_f, x.dtype, interpret)
+    dw = _matmul_call(x.T, g, block_d, block_f, block_t, w.dtype, interpret)
+    return dx, dw
+
+
+_matmul_vjp.defvjp(_matmul_vjp_fwd, _matmul_vjp_bwd)
+
+
+def matmul_tiled(x, w, *, block_t: int = 256, block_f: int = 256,
+                 block_d: int = 512, out_dtype=None,
+                 interpret: bool = False):
+    """x: (T, D) @ w: (D, F) -> (T, F), reduction-tiled (TS = block_d).
+    Differentiable: dX/dW are computed by the same Pallas kernel."""
+    return _matmul_vjp(x, w, block_t, block_f, block_d, out_dtype, interpret)
 
 
 def matmul_tiled_int8(xq, wq, sx, sw, *, block_t: int = 256,
@@ -108,8 +137,7 @@ def matmul_tiled_int8(xq, wq, sx, sw, *, block_t: int = 256,
         ],
         out_specs=pl.BlockSpec((block_t, block_f), lambda it, jf, kd: (it, jf)),
         out_shape=jax.ShapeDtypeStruct((T, F), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_t, block_f), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        scratch_shapes=[pc.VMEM((block_t, block_f), jnp.int32)],
+        compiler_params=pc.compiler_params("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(xq, wq, sx, sw)

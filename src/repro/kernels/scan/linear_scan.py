@@ -20,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat as pc
 
 
 # ---------------------------------------------------------------------------
@@ -63,9 +64,8 @@ def rglru_scan(a, b, *, block_r: int = 512, block_s: int = 256,
         out_specs=pl.BlockSpec((1, block_s, block_r),
                                lambda b_, jr, it: (b_, it, jr)),
         out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_r,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        scratch_shapes=[pc.VMEM((block_r,), jnp.float32)],
+        compiler_params=pc.compiler_params("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(a, b)
 
@@ -136,8 +136,7 @@ def wkv6_scan(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((1, chunk, dh), lambda b, ic: (b, ic, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, dh), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        scratch_shapes=[pc.VMEM((dh, dh), jnp.float32)],
+        compiler_params=pc.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(r, k, v, logw, u2)

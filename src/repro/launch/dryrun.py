@@ -25,6 +25,7 @@ from repro.models import transformer
 from repro.parallel import sharding as shd
 from repro.parallel.incontext import use_rules
 from repro.roofline import analysis as roofline
+from repro.roofline import hlo_cost
 from repro.train import step as step_lib
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -116,7 +117,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str = OUT_DIR
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_cost.cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     mem_per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes)

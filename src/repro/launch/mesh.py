@@ -13,19 +13,34 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: explicit Auto axis types exist
+    only on jax >= 0.5 (0.4.x meshes are implicitly auto-sharded)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape, axes):
+    """``AbstractMesh`` across jax versions: 0.4.x takes one tuple of
+    (name, size) pairs, 0.5+ takes (axis_sizes, axis_names)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Tiny mesh over however many (host) devices exist — used by tests."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

@@ -47,6 +47,15 @@ _COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
              "collective-permute")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalised across jax versions: 0.4.x
+    returns a one-element list of dicts, 0.5+ the dict itself."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):
@@ -180,12 +189,19 @@ def _dot_flops(instr: Instr, shapes: dict) -> float:
         out_elems *= d
     # contraction size from lhs shape + lhs_contracting_dims
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
-    ops = [o.strip().lstrip("%") for o in
-           re.split(r",\s*(?![^{]*\})", instr.rest.split(")")[0]) if o.strip()]
+    seg = instr.rest.split(")")[0]
+    # newer XLA dumps inline the operand type (`dot(f32[a,b]{1,0} %x, ...)`)
+    # — read the lhs shape straight off the first operand when present;
+    # otherwise resolve the operand name against the computation's shapes.
+    inline = re.match(r"\s*(\w+\[[0-9,]*\])", seg)
+    if inline:
+        ldims = _dims(inline.group(1))
+    else:
+        ops = [o.strip().lstrip("%") for o in
+               re.split(r",\s*(?![^{]*\})", seg) if o.strip()]
+        ldims = _dims(shapes.get(ops[0], "")) if ops else []
     contract = 1
-    if m and ops:
-        lhs_type = shapes.get(ops[0], "")
-        ldims = _dims(lhs_type)
+    if m:
         for idx in m.group(1).split(","):
             if idx and int(idx) < len(ldims):
                 contract *= ldims[int(idx)]

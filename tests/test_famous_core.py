@@ -65,6 +65,26 @@ def test_flexible_attention_one_executable_many_topologies():
     assert fa._fn._cache_size() == 1
 
 
+def test_flexible_attention_counts_compilations():
+    """The compilations counter tracks actual (re)traces: one executable
+    reused across topologies => exactly one compilation."""
+    fa = flexible.FlexibleAttention(max_heads=4, max_seq=64, max_head_dim=32)
+    assert fa.compilations == 0
+    for (H, S, dh) in [(4, 64, 32), (2, 32, 16), (3, 48, 32)]:
+        ks = jax.random.split(jax.random.PRNGKey(H + S), 3)
+        qkv = [jax.random.normal(k, (1, S, H, dh)) * 0.5 for k in ks]
+        fa(*qkv)
+    assert fa.compilations == 1
+
+
+@pytest.mark.parametrize("n,expect", [
+    (1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (127, 128), (128, 128),
+    (129, 256),
+])
+def test_next_pow2(n, expect):
+    assert flexible.next_pow2(n) == expect
+
+
 def test_decode_attention_masks_by_cache_len():
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
     q = jax.random.normal(ks[0], (2, 1, 4, 16)) * 0.5

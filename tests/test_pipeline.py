@@ -5,6 +5,7 @@ import numpy as np
 
 from repro.configs.base import SMOKE_SHAPES, get_config, shrink
 from repro.data import pipeline
+from repro.launch.mesh import make_mesh
 
 
 CFG = shrink(get_config("qwen2-7b"))
@@ -44,8 +45,7 @@ def test_frontend_batches():
 
 
 def test_global_batch_sharded():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     from repro.parallel import sharding as shd
     sh = shd.batch_sharding(mesh, 2, None,
                             (SHAPE.global_batch, SHAPE.seq_len))
@@ -55,8 +55,7 @@ def test_global_batch_sharded():
 
 
 def test_prefetch_iterator():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     from repro.parallel import sharding as shd
     sh = shd.batch_sharding(mesh, 2, None,
                             (SHAPE.global_batch, SHAPE.seq_len))

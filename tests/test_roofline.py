@@ -40,7 +40,7 @@ def test_scan_trip_count_multiplies_flops():
         (cost.flops, expect, cost.while_trips)
     # XLA's builtin analysis undercounts by ~n_steps — the reason this
     # module exists:
-    xla_flops = c.cost_analysis().get("flops", 0)
+    xla_flops = hlo_cost.cost_analysis_dict(c).get("flops", 0)
     assert xla_flops < cost.flops / 4
 
 

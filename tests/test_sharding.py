@@ -3,17 +3,17 @@ shrinking, tree mapping.  Uses AbstractMesh so 16-way axes can be tested on
 a 1-device host (spec resolution only reads names/sizes)."""
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import abstract_mesh, make_mesh
 from repro.parallel import sharding as shd
 
-MESH2 = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH2 = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _real_mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_basic():
