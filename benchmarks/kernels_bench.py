@@ -65,6 +65,51 @@ def run():
     common.emit("kernels/attention_fwd_bwd_pallas_interpret", us,
                 f"shape={Bg}x{Sg}x{Hg}x{dhg};gqa={Hg//KVg}")
 
+    # ---- decode (serving hot path): contiguous vs paged KV cache ---------
+    # Same math, two cache layouts: a per-slot (B, Skv, KV, dh) stripe vs a
+    # shared page pool addressed through a scalar-prefetched page table.
+    Bd, Hd, KVd, dhd, Skv, ps = 4, 8, 4, 64, 1024, 64
+    n_p = Skv // ps
+    kd = jax.random.split(jax.random.PRNGKey(2), 4)
+    qd = jax.random.normal(kd[0], (Bd, 1, Hd, dhd), jnp.float32)
+    kc = jax.random.normal(kd[1], (Bd, Skv, KVd, dhd), jnp.float32)
+    vc = jax.random.normal(kd[2], (Bd, Skv, KVd, dhd), jnp.float32)
+    lens = jnp.asarray([Skv, Skv // 2, 100, 7], jnp.int32)  # mixed residency
+    dcfg = famous.FamousConfig(impl="xla")
+
+    @jax.jit
+    def dense_decode(q, k, v, lens):
+        return famous.decode_attention(q, k, v, lens, cfg=dcfg)
+
+    us = common.timeit(dense_decode, qd, kc, vc, lens)
+    common.emit("kernels/decode_contiguous_xla", us, f"skv={Skv};b={Bd}")
+
+    n_pages = 1 + Bd * n_p
+    ids = jnp.arange(1, n_pages).reshape(Bd, n_p).astype(jnp.int32)
+    kp = jnp.zeros((n_pages, ps, KVd, dhd), jnp.float32
+                   ).at[ids].set(kc.reshape(Bd, n_p, ps, KVd, dhd))
+    vp = jnp.zeros((n_pages, ps, KVd, dhd), jnp.float32
+                   ).at[ids].set(vc.reshape(Bd, n_p, ps, KVd, dhd))
+
+    @jax.jit
+    def paged_decode(q, kp, vp, pt, lens):
+        return famous.paged_decode_attention(q, kp, vp, pt, lens, cfg=dcfg)
+
+    us = common.timeit(paged_decode, qd, kp, vp, ids, lens)
+    common.emit("kernels/decode_paged_gather_xla", us,
+                f"page={ps};pages={n_pages}")
+
+    pcfg = famous.FamousConfig(impl="pallas")
+
+    @jax.jit
+    def paged_decode_pl(q, kp, vp, pt, lens):
+        return famous.paged_decode_attention(q, kp, vp, pt, lens, cfg=pcfg)
+
+    us = common.timeit(paged_decode_pl, qd, kp, vp, ids, lens,
+                       warmup=1, iters=3)
+    common.emit("kernels/decode_paged_pallas_interpret", us,
+                f"page={ps};pages={n_pages}")
+
     lat = analytical.mha_latency(batch=B, seq=SL, heads=H, kv_heads=H,
                                  head_dim=dh, d_model=D)
     for m in lat.modules:

@@ -1,0 +1,72 @@
+"""Serving-throughput microbench: tokens/s through the continuous-batching
+engine at mixed request lengths, contiguous vs paged KV cache.
+
+Emits one CSV row per (cache_kind) with tokens/s and the cache HBM footprint
+the layout implies — the paged row also runs a half-footprint oversubscribed
+pool to show admission control sustaining throughput with less memory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import get_config, shrink
+from repro.core.famous import FamousConfig
+from repro.models import module, transformer
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.paged import PagedCacheConfig
+
+N_SLOTS, MAX_SEQ, PAGE = 4, 256, 16
+MAX_NEW = 16
+
+
+def _requests(cfg, n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    # bimodal mix: mostly short prompts plus a few long-context stragglers
+    lens = [int(rng.integers(4, 24)) if i % 4 else int(rng.integers(96, 160))
+            for i in range(n)]
+    return [Request(rid=i,
+                    tokens=list(rng.integers(0, cfg.vocab_size, size=n_)),
+                    max_new=MAX_NEW)
+            for i, n_ in enumerate(lens)]
+
+
+def _cache_bytes(engine) -> int:
+    return sum(b.size * b.dtype.itemsize
+               for b in jax.tree_util.tree_leaves(engine.caches))
+
+
+def _bench(params, cfg, label, **kw):
+    engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                           n_slots=N_SLOTS, max_seq=MAX_SEQ, **kw)
+    reqs = _requests(cfg)
+    engine.run(_requests(cfg, n=N_SLOTS, seed=1), max_steps=40)  # warm jits
+    t0 = time.monotonic()
+    done = engine.run(reqs)
+    dt = time.monotonic() - t0
+    tok = sum(len(r.out) for r in done)
+    us_per_tok = dt / max(tok, 1) * 1e6
+    common.emit(f"serving/{label}", us_per_tok,
+                f"tok_s={tok/dt:.1f};requests={len(done)};"
+                f"cache_mib={_cache_bytes(engine)/2**20:.2f}")
+
+
+def run():
+    print("# serving-level: continuous batching tokens/s at mixed request "
+          "lengths (CPU), contiguous vs paged KV cache")
+    cfg = shrink(get_config("qwen2-7b"))
+    params = module.init_params(transformer.model_spec(cfg),
+                                jax.random.PRNGKey(0), jnp.float32)
+    _bench(params, cfg, "contiguous")
+    _bench(params, cfg, "paged", cache_kind="paged", page_size=PAGE)
+    half = max(2, PagedCacheConfig.default_pool(N_SLOTS, MAX_SEQ, PAGE) // 2)
+    _bench(params, cfg, "paged_oversubscribed_half_pool",
+           cache_kind="paged", page_size=PAGE, n_pages=half)
+
+
+if __name__ == "__main__":
+    run()

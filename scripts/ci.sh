@@ -1,7 +1,36 @@
 #!/usr/bin/env bash
-# Tier-1 verification (ROADMAP.md): the full pytest suite from the repo root.
+# Tier-1 verification (ROADMAP.md): the full pytest suite from the repo root,
+# plus a quickstart smoke-run and an intra-repo doc-link check.
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# --- doc links: every relative markdown link target must exist -------------
+echo "== doc-link check =="
+fail=0
+for doc in README.md docs/*.md; do
+  [ -f "$doc" ] || continue
+  base=$(dirname "$doc")
+  # extract (path) targets of markdown links; keep repo-relative ones only,
+  # stripping any #fragment so anchored links are checked too
+  for target in $(grep -o '](\([^)]*\))' "$doc" | sed 's/](//; s/)$//' \
+                   | grep -v '^https\?://' | grep -v '^mailto:'); do
+    case "$target" in *'"'*) continue ;; esac   # titled-link fragments
+    path="${target%%#*}"
+    [ -z "$path" ] && continue
+    if [ ! -e "$base/$path" ] && [ ! -e "$path" ]; then
+      echo "BROKEN LINK: $doc -> $target"
+      fail=1
+    fi
+  done
+done
+[ "$fail" -eq 0 ] || { echo "doc-link check failed"; exit 1; }
+echo "doc links ok"
+
+# --- quickstart smoke: the three impls must still agree --------------------
+echo "== examples/quickstart.py smoke =="
+python examples/quickstart.py
+
+# --- full test suite -------------------------------------------------------
 exec python -m pytest -x -q "$@"

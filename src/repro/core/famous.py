@@ -360,6 +360,32 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
+                           scale=None, cfg: FamousConfig = FamousConfig()):
+    """One-token attention against a *paged* KV cache.
+
+    q: (B, 1, H, dh); pools: (n_pages, page_size, KV, dh) shared by every
+    sequence; page_table: (B, n_p) int32 page ids per slot; cache_len: (B,)
+    int32 valid entries (the new token's k/v already written to its page).
+
+    impl="pallas" streams pages directly via a scalar-prefetched page table
+    (kernels/decode); other impls gather the table into a contiguous
+    per-slot view and reuse the dense decode path — the XLA reference the
+    kernel is validated against.
+    """
+    B, _, H, dh = q.shape
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    if cfg.impl == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+        return dec_ops.paged_decode_attention(q, k_pages, v_pages,
+                                              page_table, cache_len,
+                                              scale=scale)
+    from repro.kernels.decode.ref import gather_pages
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return decode_attention(q, k, v, cache_len, scale=scale, cfg=cfg)
+
+
 # ---------------------------------------------------------------------------
 # Full MHA layer (projection + attention + output) — the paper's fig. 3 box.
 # ---------------------------------------------------------------------------

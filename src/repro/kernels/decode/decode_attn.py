@@ -8,6 +8,14 @@ query heads (FAMOUS's shared-K-BRAM PE grouping).
 
 ``cache_len`` masking uses a scalar read from a (B, 1) int32 input —
 the runtime-programmable "sequence length register" of the paper's µB.
+
+Two cache layouts share the online-softmax inner loop:
+
+  * ``decode_attention``       — contiguous (BKV, Skv, dh) per-slot caches.
+  * ``paged_decode_attention`` — a shared (n_pages, page_size, KV, dh) page
+    pool; a scalar-prefetched per-slot page table drives the K/V BlockSpec
+    index_map, so each key tile is DMA'd straight from its page (no gather
+    materialisation), the TPU analogue of FAMOUS's banked-BRAM tiling.
 """
 from __future__ import annotations
 
@@ -60,6 +68,95 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
     def _flush():
         o_ref[0, ...] = (acc_ref[...]
                          / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float,
+                         page_size: int, n_p: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (group, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page_size, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    valid_len = len_ref[b]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (group, ps)
+    pos = ip * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = pos < valid_len
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ip == n_p - 1)
+    def _flush():
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """Page-table-indexed decode attention.
+
+    q: (B, KV, group, dh); pools: (n_pages, page_size, KV, dh);
+    page_table: (B, n_p) int32 page ids; cache_len: (B,) int32.
+    Returns (B, KV, group, dh).
+
+    The page table and lengths are *scalar-prefetched*: they reach SMEM
+    before the kernel body runs, and the K/V BlockSpec index_maps read
+    ``page_table[b, ip]`` to aim each page DMA — the grid program never
+    changes shape when sequences grow or move, only the prefetched indices
+    do (the paper's µB reprograms addresses, never re-synthesises).
+    """
+    B, KV, group, dh = q.shape
+    n_pages, page_size = k_pages.shape[0], k_pages.shape[1]
+    n_p = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    kernel = functools.partial(_paged_decode_kernel, scale=float(scale),
+                               page_size=page_size, n_p=n_p)
+    grid_spec = pc.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # cache_len, page_table
+        grid=(B, KV, n_p),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh),
+                         lambda b, g, ip, lens, pt: (b, g, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, g, ip, lens, pt: (pt[b, ip], 0, g, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, g, ip, lens, pt: (pt[b, ip], 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh),
+                               lambda b, g, ip, lens, pt: (b, g, 0, 0)),
+        scratch_shapes=[
+            pc.VMEM((group, dh), jnp.float32),
+            pc.VMEM((group, 1), jnp.float32),
+            pc.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, dh), q.dtype),
+        compiler_params=pc.compiler_params("parallel", "parallel",
+                                           "arbitrary"),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), page_table.astype(jnp.int32),
+      q, k_pages, v_pages)
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,

@@ -33,3 +33,20 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None,
                                        scale=scale, block_k=block_k,
                                        interpret=interpret)
     return out.reshape(B, KV, group, dh).reshape(B, 1, H, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
+                           scale=None, interpret=None):
+    """q: (B, 1, H, dh); pools: (n_pages, page_size, KV, dh);
+    page_table: (B, n_p) int32; cache_len: (B,) int32.
+    Returns (B, 1, H, dh)."""
+    B, _, H, dh = q.shape
+    KV = k_pages.shape[2]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    qf = q[:, 0].reshape(B, KV, group, dh)
+    out = decode_attn.paged_decode_attention(qf, k_pages, v_pages,
+                                             page_table, cache_len,
+                                             scale=scale, interpret=interpret)
+    return out.reshape(B, 1, H, dh)

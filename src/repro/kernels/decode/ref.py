@@ -24,3 +24,32 @@ def decode_reference(q, k_cache, v_cache, cache_len, *, window: int = 0,
     p = jnp.where(jnp.isnan(p), 0.0, p)
     return jnp.einsum("bgk,bkd->bgd", p,
                       v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def gather_pages(pages, page_table):
+    """Flatten a page pool into per-sequence contiguous caches.
+
+    pages: (n_pages, page_size, KV, dh); page_table: (B, n_p) int32.
+    Returns (B, n_p * page_size, KV, dh).
+    """
+    n_p, ps = page_table.shape[1], pages.shape[1]
+    g = pages[page_table]                     # (B, n_p, ps, KV, dh)
+    return g.reshape(g.shape[0], n_p * ps, *pages.shape[2:])
+
+
+def paged_decode_reference(q, k_pages, v_pages, page_table, cache_len, *,
+                           scale: float | None = None):
+    """Gather-based oracle for the paged kernel.
+
+    q: (B, KV, group, dh); pools: (n_pages, page_size, KV, dh);
+    page_table: (B, n_p); cache_len: (B,).  Returns (B, KV, group, dh).
+    """
+    B, KV, group, dh = q.shape
+    k = gather_pages(k_pages, page_table)     # (B, Skv, KV, dh)
+    v = gather_pages(v_pages, page_table)
+    qf = q.reshape(B * KV, group, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, -1, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, -1, dh)
+    lens = jnp.repeat(cache_len, KV)
+    out = decode_reference(qf, kf, vf, lens, scale=scale)
+    return out.reshape(B, KV, group, dh)

@@ -33,6 +33,11 @@ ANY = MemorySpace.ANY
 # buffer constructor on every supported jax; keep the pltpu object.
 VMEM = pltpu.VMEM
 
+# Scalar-prefetch grid spec (stable name on both lines): prefetched int32
+# operands land in SMEM before the kernel runs and are visible to BlockSpec
+# index_maps — the mechanism behind page-table-driven K/V gathers.
+PrefetchScalarGridSpec = pltpu.PrefetchScalarGridSpec
+
 
 def compiler_params(*dimension_semantics: str, **kwargs):
     """Build compiler params with the given per-grid-dim semantics.

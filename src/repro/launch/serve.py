@@ -27,6 +27,16 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-kind", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="KV-cache layout: per-slot max_seq stripes, or a "
+                         "shared page pool with per-slot page tables")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="pool pages incl. the null page (paged mode); "
+                         "0 = full contiguous-equivalent capacity — pass "
+                         "less to oversubscribe")
     args = ap.parse_args()
 
     cfg = shrink(get_config(args.arch))
@@ -35,7 +45,10 @@ def main():
     params = module.init_params(transformer.model_spec(cfg),
                                 jax.random.PRNGKey(args.seed), jnp.float32)
     engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
-                           n_slots=args.slots, max_seq=args.max_seq)
+                           n_slots=args.slots, max_seq=args.max_seq,
+                           cache_kind=args.cache_kind,
+                           page_size=args.page_size,
+                           n_pages=args.n_pages or None)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     tokens=list(rng.integers(0, cfg.vocab_size,
@@ -48,7 +61,12 @@ def main():
     tok = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {tok} tokens in {dt:.2f}s "
           f"({tok/dt:.1f} tok/s), prefill executables: "
-          f"{engine.prefill_compilations} (bucketed={engine.bucketed})")
+          f"{engine.prefill_compilations} (bucketed={engine.bucketed}, "
+          f"cache={engine.cache_kind})")
+    if engine.paged:
+        print(f"page pool: {engine.pcfg.n_pages} pages x "
+              f"{engine.pcfg.page_size} tokens, "
+              f"{engine.alloc.free_pages} free after drain")
     for r in done[:3]:
         print(f"  req {r.rid}: prompt[:6]={r.tokens[:6]} -> out={r.out}")
 

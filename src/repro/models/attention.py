@@ -56,6 +56,23 @@ ATTN_CACHE_AXES = {"k": ("batch", None, "kv_heads", "head_dim"),
                    "v": ("batch", None, "kv_heads", "head_dim")}
 
 
+def make_paged_attn_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                          dtype) -> dict:
+    """Shared page pool for a global-attention layer: every sequence's K/V
+    live in fixed-size pages addressed through a per-slot page table (no
+    per-slot batch axis here — the pool is the batch)."""
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    shape = (n_pages, page_size, kv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_attn_cache_shape(cfg: ModelConfig, n_pages: int, page_size: int,
+                           dtype) -> dict:
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    sds = jax.ShapeDtypeStruct((n_pages, page_size, kv, dh), dtype)
+    return {"k": sds, "v": sds}
+
+
 def _project(p, x, cfg: ModelConfig, fcfg: famous.FamousConfig, positions):
     q, k, v = famous.qkv_projection(
         x, p["wq"], p["wk"], p["wv"], p.get("bq"), p.get("bk"), p.get("bv"),
@@ -123,5 +140,31 @@ def apply_attn_decode(p: dict, x: jax.Array, cache: dict, cache_len,
     cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
     valid = jnp.minimum(cache_len + 1, slots) if window else cache_len + 1
     out = famous.decode_attention(q, cache["k"], cache["v"], valid, cfg=fcfg)
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+    return o, cache
+
+
+def apply_attn_decode_paged(p: dict, x: jax.Array, cache: dict, page_table,
+                            cache_len, cfg: ModelConfig,
+                            fcfg: famous.FamousConfig):
+    """One-token decode against the shared page pool.
+
+    x: (B, 1, D); cache: {"k","v"} pools (n_pages, page_size, kv, dh);
+    page_table: (B, pages_per_slot) int32; cache_len: (B,) valid entries
+    BEFORE this token.  The new token's K/V scatter into page
+    ``page_table[b, len // page_size]`` at offset ``len % page_size``
+    (distinct slots hold distinct pages, so the batched scatter never
+    collides; inactive slots write the null page).  Returns (out, cache).
+    """
+    B = x.shape[0]
+    positions = cache_len[:, None]
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    ps = cache["k"].shape[1]
+    pids = page_table[jnp.arange(B), cache_len // ps]      # (B,)
+    offs = cache_len % ps
+    cache = {"k": cache["k"].at[pids, offs].set(k[:, 0].astype(cache["k"].dtype)),
+             "v": cache["v"].at[pids, offs].set(v[:, 0].astype(cache["v"].dtype))}
+    out = famous.paged_decode_attention(q, cache["k"], cache["v"],
+                                        page_table, cache_len + 1, cfg=fcfg)
     o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
     return o, cache

@@ -9,7 +9,12 @@ tail for patterns that do not divide the layer count (recurrentgemma's 26 = 8
 Three entry points:
   * ``forward``        — full-sequence logits (training / encoder).
   * ``prefill``        — forward + build per-layer caches (serving).
-  * ``decode_step``    — one token against the caches (serving decode).
+  * ``decode_step``    — one token against the caches (serving decode;
+    contiguous per-slot caches, or paged pools when given a page table).
+
+Plus slot-granular cache surgery for the serving engine
+(``write_prefill_to_slot`` / ``clear_slot``), which keeps knowledge of the
+cache tree's structure out of serve/engine.py.
 """
 from __future__ import annotations
 
@@ -166,7 +171,15 @@ def logits_fn(params, x, cfg: ModelConfig):
 
 
 def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int, dtype,
-                 shapes_only: bool = False):
+                 shapes_only: bool = False, cache_kind: str = "contiguous",
+                 page_size: int = 0, n_pages: int = 0):
+    if kind == ATTN and cache_kind == "paged":
+        # global-attention layers share a page pool; sliding-window and
+        # recurrent layers are already O(window)/O(1) per slot and keep
+        # their per-slot buffers even in paged mode.
+        fn = (attention.paged_attn_cache_shape if shapes_only
+              else attention.make_paged_attn_cache)
+        return fn(cfg, n_pages, page_size, dtype)
     if kind in (ATTN, LOCAL_ATTN):
         window = cfg.window if kind == LOCAL_ATTN else 0
         fn = attention.attn_cache_shape if shapes_only else attention.make_attn_cache
@@ -190,14 +203,29 @@ def _stack_cache_tree(unit_caches: dict, n: int, shapes_only: bool):
 
 
 def make_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype,
-                shapes_only: bool = False) -> dict:
-    unit = {f"pos{i}": _block_cache(k, cfg, batch, max_seq, dtype, shapes_only)
+                shapes_only: bool = False, *, cache_kind: str = "contiguous",
+                page_size: int = 0, n_pages: int = 0) -> dict:
+    """Build the per-layer decode caches.
+
+    cache_kind="contiguous": every attention layer gets a per-slot
+    ``(batch, max_seq | window, kv, dh)`` buffer (the seed baseline).
+    cache_kind="paged": global-attention layers instead share a
+    ``(n_pages, page_size, kv, dh)`` page pool addressed through the page
+    table that ``decode_step`` receives at call time; memory then scales
+    with live tokens, not ``batch x max_seq`` (see serve/paged.py).
+    """
+    assert cache_kind in ("contiguous", "paged"), cache_kind
+    if cache_kind == "paged":
+        assert page_size > 0 and n_pages > 0, (page_size, n_pages)
+    unit = {f"pos{i}": _block_cache(k, cfg, batch, max_seq, dtype, shapes_only,
+                                    cache_kind, page_size, n_pages)
             for i, k in enumerate(cfg.pattern_unit)}
     caches: dict[str, Any] = {
         "blocks": _stack_cache_tree(unit, cfg.num_units, shapes_only)}
     for i, k in enumerate(cfg.tail_layers):
         caches[f"tail{i}"] = _block_cache(k, cfg, batch, max_seq, dtype,
-                                          shapes_only)
+                                          shapes_only, cache_kind, page_size,
+                                          n_pages)
     return caches
 
 
@@ -243,8 +271,14 @@ def _apply_block_prefill(kind, p, x, cache, cfg, fcfg):
     raise ValueError(kind)
 
 
-def _apply_block_decode(kind, p, x, cache, cache_len, cfg, fcfg):
+def _apply_block_decode(kind, p, x, cache, cache_len, cfg, fcfg,
+                        page_table=None):
     n = functools.partial(layers.apply_norm, kind=cfg.norm)
+    if kind == ATTN and page_table is not None:
+        a, cache = attention.apply_attn_decode_paged(
+            p["attn"], n(p["ln1"], x), cache, page_table, cache_len, cfg, fcfg)
+        x = x + a
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
     if kind in (ATTN, LOCAL_ATTN):
         window = cfg.window if kind == LOCAL_ATTN else 0
         a, cache = attention.apply_attn_decode(p["attn"], n(p["ln1"], x),
@@ -295,9 +329,13 @@ def prefill(params, inputs, caches, cfg: ModelConfig,
 
 
 def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
-                fcfg: FamousConfig = FamousConfig(), compute_dtype=None):
+                fcfg: FamousConfig = FamousConfig(), compute_dtype=None,
+                page_table=None):
     """tokens: (B,) int32 (or (B, D) embeddings); cache_len: (B,).
-    Returns (logits (B, vocab), new caches)."""
+    page_table: optional (B, pages_per_slot) int32 — when given, global
+    attention layers treat their caches as shared page pools (see
+    ``make_caches(cache_kind="paged")``); when None, caches are the
+    contiguous per-slot baseline.  Returns (logits (B, vocab), new caches)."""
     dtype = compute_dtype or params["final_norm"]["scale"].dtype
     inputs = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
     x = _embed_inputs(params, inputs, cfg, dtype)
@@ -308,7 +346,8 @@ def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
         for i, kind in enumerate(cfg.pattern_unit):
             key = f"pos{i}"
             x, new_caches[key] = _apply_block_decode(
-                kind, unit_params[key], x, unit_cache[key], cache_len, cfg, fcfg)
+                kind, unit_params[key], x, unit_cache[key], cache_len, cfg,
+                fcfg, page_table)
         return x, new_caches
 
     x, new_block_caches = jax.lax.scan(
@@ -317,6 +356,97 @@ def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
     for i, kind in enumerate(cfg.tail_layers):
         x, new_caches[f"tail{i}"] = _apply_block_decode(
             kind, params[f"tail{i}"], x, caches[f"tail{i}"], cache_len, cfg,
-            fcfg)
+            fcfg, page_table)
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)
     return logits_fn(params, x, cfg)[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# serving: slot-granular cache surgery (used by serve/engine.py)
+# ---------------------------------------------------------------------------
+
+
+def _write_slot(dst, src, slot, axis):
+    return jax.lax.dynamic_update_slice_in_dim(
+        dst, src.astype(dst.dtype), slot, axis=axis)
+
+
+def _scatter_pages(pool, kv_seq, page_ids):
+    """Scatter a contiguous (.., max_seq, kv, dh) K/V stripe into pool pages.
+
+    pool: (..., n_pages, page_size, kv, dh); kv_seq: (..., max_seq, kv, dh);
+    page_ids: (pages_per_slot,) int32, NULL-padded past the slot's live pages
+    (the null page absorbs the padded chunks).  max_seq == pages_per_slot *
+    page_size by construction (engine asserts max_seq % page_size == 0).
+    """
+    n_p = page_ids.shape[0]
+    ps = pool.shape[-3]
+    lead = kv_seq.shape[:-3]
+    chunks = kv_seq.reshape(lead + (n_p, ps) + kv_seq.shape[-2:])
+    axis = len(lead)
+    idx = (slice(None),) * axis + (page_ids,)
+    return pool.at[idx].set(chunks.astype(pool.dtype))
+
+
+def write_prefill_to_slot(caches, one, slot, cfg: ModelConfig,
+                          page_ids=None) -> dict:
+    """Write a single-sequence prefill cache ``one`` (batch=1, contiguous)
+    into slot ``slot`` of the batched ``caches``.
+
+    Contiguous mode (page_ids=None): every leaf is a dynamic-update-slice on
+    its slot axis (1 for the stacked block caches, 0 for tails).  Paged mode:
+    global-attention K/V additionally reshape into page_size chunks and
+    scatter to the slot's pages; all other leaves write their slot row as
+    before.
+    """
+    def write_tree(dst, src, axis):
+        return jax.tree_util.tree_map(
+            lambda d, s: _write_slot(d, s, slot, axis), dst, src)
+
+    out: dict[str, Any] = {"blocks": {}}
+    for i, kind in enumerate(cfg.pattern_unit):
+        key = f"pos{i}"
+        dst, src = caches["blocks"][key], one["blocks"][key]
+        if page_ids is not None and kind == ATTN:
+            out["blocks"][key] = {
+                n: _scatter_pages(dst[n], src[n][:, 0], page_ids)
+                for n in ("k", "v")}
+        else:
+            out["blocks"][key] = write_tree(dst, src, 1)
+    for i, kind in enumerate(cfg.tail_layers):
+        key = f"tail{i}"
+        if page_ids is not None and kind == ATTN:
+            out[key] = {n: _scatter_pages(caches[key][n], one[key][n][0],
+                                          page_ids)
+                        for n in ("k", "v")}
+        else:
+            out[key] = write_tree(caches[key], one[key], 0)
+    return out
+
+
+def clear_slot(caches, slot, cfg: ModelConfig, paged: bool = False) -> dict:
+    """Zero slot ``slot``'s per-slot cache state (stale-state hygiene for
+    length-1 admissions that skip prefill).  In paged mode global-attention
+    pools are left alone: the slot's pages were already freed and any stale
+    page content is unreachable (the page table row is null and reads are
+    cache_len-masked)."""
+    def zero_tree(tree, axis):
+        def z(buf):
+            idx = (slice(None),) * axis + (slot,)
+            return buf.at[idx].set(jnp.zeros((), buf.dtype))
+        return jax.tree_util.tree_map(z, tree)
+
+    out: dict[str, Any] = {"blocks": {}}
+    for i, kind in enumerate(cfg.pattern_unit):
+        key = f"pos{i}"
+        if paged and kind == ATTN:
+            out["blocks"][key] = caches["blocks"][key]
+        else:
+            out["blocks"][key] = zero_tree(caches["blocks"][key], 1)
+    for i, kind in enumerate(cfg.tail_layers):
+        key = f"tail{i}"
+        if paged and kind == ATTN:
+            out[key] = caches[key]
+        else:
+            out[key] = zero_tree(caches[key], 0)
+    return out

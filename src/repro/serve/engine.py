@@ -14,6 +14,23 @@ of the prefill are discarded; generation restarts by decoding the last
 prompt token.)  Architectures with recurrent state (RG-LRU / RWKV), where
 junk tokens would pollute the carried state, prefill at exact length
 instead — the engine picks the strategy from the config.
+
+KV-cache layout is a config switch (``cache_kind``):
+
+  * ``"contiguous"`` — each slot owns a ``max_seq`` stripe of every
+    attention layer's cache (the seed baseline; memory = n_slots × max_seq
+    regardless of what is actually resident).
+  * ``"paged"``      — global-attention layers share a page pool; slots
+    hold pages through a host-side :class:`~repro.serve.paged.PageAllocator`
+    and the decode executable receives the page table as a plain int32
+    operand each step (same executable for every allocation state).  Memory
+    scales with live tokens and admission control degrades cleanly: requests
+    the pool cannot back yet wait in the pending queue, sequences that run
+    out of pages mid-decode are preempted youngest-first and resumed later
+    (token-identically — resuming is just a longer prefill), and impossible
+    requests raise :class:`~repro.serve.paged.PagePoolExhausted` (or come
+    back with ``req.error`` from :meth:`run`).  docs/serving.md walks
+    through the lifecycle.
 """
 from __future__ import annotations
 
@@ -29,6 +46,8 @@ from repro.configs.base import ATTN, LOCAL_ATTN, ModelConfig
 from repro.core.famous import FamousConfig
 from repro.core.flexible import next_pow2
 from repro.models import transformer
+from repro.serve.paged import (PageAllocator, PagedCacheConfig,
+                               PagePoolExhausted)
 
 
 @dataclasses.dataclass
@@ -38,51 +57,65 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None  # set when the page pool can never back it
 
 
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, fcfg: FamousConfig,
-                 n_slots: int = 4, max_seq: int = 256, dtype=jnp.float32):
+                 n_slots: int = 4, max_seq: int = 256, dtype=jnp.float32,
+                 cache_kind: str = "contiguous", page_size: int = 16,
+                 n_pages: Optional[int] = None):
+        assert cache_kind in ("contiguous", "paged"), cache_kind
         self.params = params
         self.cfg = cfg
         self.fcfg = fcfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.dtype = dtype
-        self.caches = transformer.make_caches(cfg, n_slots, max_seq, dtype)
+        self.cache_kind = cache_kind
+        self.paged = cache_kind == "paged"
+        if self.paged:
+            assert max_seq % page_size == 0, (max_seq, page_size)
+            if n_pages is None:  # drop-in capacity; pass n_pages to oversubscribe
+                n_pages = PagedCacheConfig.default_pool(n_slots, max_seq,
+                                                        page_size)
+            self.pcfg = PagedCacheConfig(page_size=page_size, n_pages=n_pages)
+            self.alloc = PageAllocator(self.pcfg, n_slots, max_seq)
+            self.caches = transformer.make_caches(
+                cfg, n_slots, max_seq, dtype, cache_kind="paged",
+                page_size=page_size, n_pages=n_pages)
+        else:
+            self.caches = transformer.make_caches(cfg, n_slots, max_seq, dtype)
         self.cache_len = jnp.zeros((n_slots,), jnp.int32)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.last_token = jnp.zeros((n_slots,), jnp.int32)
+        # admission order per slot (youngest-first preemption policy) and the
+        # queue of preempted requests awaiting re-admission
+        self._admit_counter = 0
+        self._slot_admit = [-1] * n_slots
+        self._preempted: list[Request] = []
+        self._failed: list[Request] = []
+        self._pt_version = -1          # device page-table cache key
+        self._pt_device = None
         self._prefill_exec: dict[int, callable] = {}
         self._decode = jax.jit(
             functools.partial(transformer.decode_step, cfg=cfg, fcfg=fcfg))
+        self._clear = jax.jit(functools.partial(
+            transformer.clear_slot, cfg=cfg, paged=self.paged))
         # recurrent state cannot absorb junk pad tokens -> exact-length prefill
         self.bucketed = all(k in (ATTN, LOCAL_ATTN) for k in cfg.pattern_unit)
 
     # -- compiled helpers ---------------------------------------------------
     def _prefill_fn(self, length: int):
         if length not in self._prefill_exec:
-            def fn(params, tokens, caches, slot):
+            def fn(params, tokens, caches, slot, page_ids):
                 one = transformer.make_caches(self.cfg, 1, self.max_seq,
                                               self.dtype)
                 _, one = transformer.prefill(params, tokens, one, self.cfg,
                                              self.fcfg)
-
-                def write(axis):
-                    def w(buf, new):
-                        return jax.lax.dynamic_update_slice_in_dim(
-                            buf, new.astype(buf.dtype), slot, axis=axis)
-                    return w
-
-                # stacked block caches carry (num_units, batch, ...): the
-                # slot/batch axis is 1; tail caches carry (batch, ...).
-                out = {"blocks": jax.tree_util.tree_map(
-                    write(1), caches["blocks"], one["blocks"])}
-                for key in caches:
-                    if key != "blocks":
-                        out[key] = jax.tree_util.tree_map(
-                            write(0), caches[key], one[key])
-                return out
+                return transformer.write_prefill_to_slot(
+                    caches, one, slot, self.cfg,
+                    page_ids=page_ids if self.paged else None)
 
             self._prefill_exec[length] = jax.jit(fn)
         return self._prefill_exec[length]
@@ -91,48 +124,121 @@ class ServingEngine:
     def prefill_compilations(self) -> int:
         return len(self._prefill_exec)
 
+    def _page_table(self):
+        """Device copy of the page table, re-uploaded only when the
+        allocator actually mutated (steady-state decode re-uses it)."""
+        if self._pt_version != self.alloc.version:
+            self._pt_device = jnp.asarray(self.alloc.page_table)
+            self._pt_version = self.alloc.version
+        return self._pt_device
+
     # -- API ------------------------------------------------------------------
     def add_request(self, req: Request) -> int:
+        """Admit a request into a free slot.  Paged mode reserves the
+        prompt's pages first; on :class:`PagePoolExhausted` the engine state
+        is untouched (clean admission control — callers may retry after
+        other sequences retire).
+
+        A preempted request (non-empty ``req.out``) resumes here: its full
+        prefix (prompt + generated-so-far) is re-prefilled and greedy decode
+        continues token-identically from where it stopped.
+        """
         slot = self.slot_req.index(None)
-        n = len(req.tokens)
+        seq = list(req.tokens) + list(req.out)
+        n = len(seq)
         assert 1 <= n <= self.max_seq
+        if self.paged:
+            self.alloc.grow(slot, n)  # raises PagePoolExhausted if oversize
+        page_ids = (jnp.asarray(self.alloc.page_table[slot]) if self.paged
+                    else jnp.zeros((0,), jnp.int32))
         # prefill the first n-1 tokens; the n-th is decoded (writing its
         # cache entry / recurrent-state update exactly once).
         if n > 1:
             m = n - 1
             plen = min(next_pow2(m), self.max_seq) if self.bucketed else m
             toks = np.zeros((1, plen), np.int32)
-            toks[0, :m] = req.tokens[:m]
+            toks[0, :m] = seq[:m]
             fn = self._prefill_fn(plen)
             self.caches = fn(self.params, jnp.asarray(toks), self.caches,
-                             jnp.int32(slot))
+                             jnp.int32(slot), page_ids)
         else:  # nothing to prefill: clear any stale state in the slot
-            cleared = {"blocks": jax.tree_util.tree_map(
-                lambda b: b.at[:, slot].set(0), self.caches["blocks"])}
-            for key in self.caches:
-                if key != "blocks":
-                    cleared[key] = jax.tree_util.tree_map(
-                        lambda b: b.at[slot].set(0), self.caches[key])
-            self.caches = cleared
+            self.caches = self._clear(self.caches, jnp.int32(slot))
         self.slot_req[slot] = req
+        self._slot_admit[slot] = self._admit_counter
+        self._admit_counter += 1
         # generation restarts at the last prompt token: it is re-decoded so
         # its K/V (or recurrent-state) entry is written at position n-1.
         self.cache_len = self.cache_len.at[slot].set(n - 1)
-        self.last_token = self.last_token.at[slot].set(req.tokens[-1])
+        self.last_token = self.last_token.at[slot].set(seq[-1])
         return slot
 
+    def _preempt(self, slot: int) -> None:
+        """Evict a running sequence: free its pages and queue it for
+        re-admission (its generated tokens stay on the request, so resuming
+        is just a longer prefill — no state is copied or swapped out)."""
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self.cache_len = self.cache_len.at[slot].set(0)
+        self.alloc.free(slot)
+        self._preempted.append(req)
+
+    def _grow_active(self, active: list) -> list:
+        """Reserve the next token's page for every active slot, preempting
+        youngest-first when the pool is out of pages.  A lone sequence that
+        cannot grow is failed (req.error) rather than crashing the engine."""
+        lens = np.asarray(self.cache_len)
+        for i in list(active):
+            if i not in active:
+                continue
+            while True:
+                try:
+                    self.alloc.grow(i, int(lens[i]) + 1)
+                    break
+                except PagePoolExhausted as e:
+                    victim = max(active, key=lambda j: self._slot_admit[j])
+                    if victim == i and len(active) == 1:
+                        # nothing left to preempt: the pool can never back
+                        # this sequence — fail it cleanly
+                        req = self.slot_req[i]
+                        req.error = str(e)
+                        req.done = True
+                        self.slot_req[i] = None
+                        self.cache_len = self.cache_len.at[i].set(0)
+                        self.alloc.free(i)
+                        active.remove(i)
+                        self._failed.append(req)
+                        break
+                    self._preempt(victim)
+                    active.remove(victim)
+                    if victim == i:
+                        break
+        return active
+
     def step(self):
-        """One batched decode step across all active slots."""
+        """One batched decode step across all active slots.  Returns the
+        requests that finished (or, paged mode, failed) this step."""
+        finished = []
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if self.paged and active:
+            # ensure every active slot has a page for the token it is about
+            # to write (position cache_len -> page cache_len // page_size);
+            # may preempt or fail sequences when the pool is oversubscribed
+            active = self._grow_active(active)
+            finished.extend(self._failed)
+            self._failed.clear()
         if not active:
-            return []
-        logits, self.caches = self._decode(self.params, self.last_token,
-                                           self.caches, self.cache_len)
+            return finished
+        if self.paged:
+            logits, self.caches = self._decode(
+                self.params, self.last_token, self.caches, self.cache_len,
+                page_table=self._page_table())
+        else:
+            logits, self.caches = self._decode(self.params, self.last_token,
+                                               self.caches, self.cache_len)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         mask = jnp.asarray([r is not None for r in self.slot_req])
         self.cache_len = self.cache_len + mask.astype(jnp.int32)
         self.last_token = jnp.where(mask, next_tok, self.last_token)
-        finished = []
         toks = np.asarray(next_tok)
         for i in active:
             req = self.slot_req[i]
@@ -142,16 +248,58 @@ class ServingEngine:
                 finished.append(req)
                 self.slot_req[i] = None
                 self.cache_len = self.cache_len.at[i].set(0)
+                if self.paged:
+                    self.alloc.free(i)  # pages return to the pool
         return finished
 
+    def _admissible(self, req: Request) -> bool:
+        """Paged admission control: admit only if the sequence's pages are
+        free right now (retiring sequences release pages continuously, so
+        deferred requests drain from the pending queue).  Raises
+        :class:`PagePoolExhausted` for requests no pool state could ever
+        admit."""
+        if not self.paged:
+            return True
+        n = len(req.tokens) + len(req.out)
+        if n > self.max_seq:
+            raise PagePoolExhausted(
+                f"request {req.rid} length {n} exceeds max_seq "
+                f"{self.max_seq}")
+        need = self.pcfg.pages_for(n)
+        if need > self.pcfg.n_pages - 1:
+            raise PagePoolExhausted(
+                f"request {req.rid} needs {need} pages but the pool only "
+                f"has {self.pcfg.n_pages - 1} allocatable")
+        return self.alloc.can_admit(n)
+
     def run(self, requests: list[Request], max_steps: int = 1000):
+        """Serve ``requests`` to completion.  Preempted sequences re-enter
+        ahead of fresh ones; requests the pool can never back come back with
+        ``req.error`` set instead of crashing the loop."""
         pending = list(requests)
         done = []
         steps = 0
-        while (pending or any(r is not None for r in self.slot_req)) \
+        while (pending or self._preempted
+               or any(r is not None for r in self.slot_req)) \
                 and steps < max_steps:
-            while pending and None in self.slot_req:
-                self.add_request(pending.pop(0))
+            while (self._preempted or pending) and None in self.slot_req:
+                queue = self._preempted if self._preempted else pending
+                try:
+                    if not self._admissible(queue[0]):
+                        break
+                except PagePoolExhausted as e:
+                    req = queue.pop(0)
+                    req.error, req.done = str(e), True
+                    done.append(req)
+                    continue
+                self.add_request(queue.pop(0))
             done.extend(self.step())
             steps += 1
+        # max_steps exhausted with work still queued: surface evicted
+        # requests rather than letting them vanish (partial req.out kept)
+        for req in self._preempted:
+            req.error = req.error or (
+                f"preempted and not resumed within max_steps={max_steps}")
+            done.append(req)
+        self._preempted = []
         return done

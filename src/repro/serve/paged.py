@@ -1,0 +1,119 @@
+"""Paged KV-cache bookkeeping: page pool sizing, per-slot page tables, and a
+host-side page allocator.
+
+FAMOUS banks its attention operands into fixed-size BRAM tiles so one
+synthesis serves many shapes; the serving analogue is a *paged* KV cache:
+every global-attention layer shares one pool of fixed-size pages
+``(n_pages, page_size, kv_heads, head_dim)`` and each slot owns a list of
+page ids (its *page table*) instead of a contiguous ``max_seq`` stripe.
+HBM then scales with live tokens (``sum(ceil(len/page_size))`` pages), not
+with ``n_slots x max_seq``, so a single long-context request can coexist
+with many short ones in the same pool.
+
+Allocator invariants (checked by tests/test_paged.py):
+
+  * page 0 is the *null page* — never handed out, it absorbs writes from
+    inactive slots and padded prefill chunks; masked reads never see it.
+  * a live page id appears in exactly one slot's table (no aliasing).
+  * ``free(slot)`` returns every page of the slot and zeroes its table row.
+  * allocation beyond capacity raises :class:`PagePoolExhausted` and leaves
+    the allocator state untouched (clean admission control).
+
+The allocator is deliberately host-side (numpy): page ids change at request
+granularity, orders of magnitude slower than the decode step, and feeding
+the jitted decode as a plain ``(n_slots, pages_per_slot)`` int32 operand
+keeps one executable for every request mix (the paper's "reprogram the µB,
+never re-synthesise").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """Admission-control error: the page pool cannot back the request."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Static geometry of the paged KV cache."""
+
+    page_size: int = 16          # tokens per page (the banking granularity)
+    n_pages: int = 0             # total pool pages incl. the null page
+
+    def pages_per_slot(self, max_seq: int) -> int:
+        return -(-max_seq // self.page_size)    # ceil
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    @staticmethod
+    def default_pool(n_slots: int, max_seq: int, page_size: int) -> int:
+        """Pool sized to back a full batch of max-length sequences, plus the
+        null page — the drop-in-capacity baseline.  Callers oversubscribe by
+        passing a smaller ``n_pages`` explicitly."""
+        return 1 + n_slots * (-(-max_seq // page_size))
+
+
+class PageAllocator:
+    """Free-list allocator over page ids ``1..n_pages-1`` (0 is null)."""
+
+    def __init__(self, cfg: PagedCacheConfig, n_slots: int, max_seq: int):
+        assert cfg.n_pages >= 2, "pool needs the null page plus one real page"
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.pages_per_slot = cfg.pages_per_slot(max_seq)
+        self._free = list(range(cfg.n_pages - 1, 0, -1))  # pop() -> low ids
+        # slot page tables; row s lists the pages of slot s, NULL_PAGE-padded.
+        self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self._n_held = np.zeros((n_slots,), np.int32)
+        # bumped on every table mutation so callers can cache derived state
+        # (e.g. the device copy of the page table) and re-upload only when
+        # allocation actually changed
+        self.version = 0
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_held(self, slot: int) -> int:
+        return int(self._n_held[slot])
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.cfg.pages_for(max(n_tokens, 1)) <= self.free_pages
+
+    # -- mutation -----------------------------------------------------------
+    def grow(self, slot: int, n_tokens: int) -> None:
+        """Ensure slot ``slot`` holds enough pages for ``n_tokens`` tokens.
+        Raises :class:`PagePoolExhausted` (state untouched) if it cannot."""
+        need = self.cfg.pages_for(n_tokens)
+        if need > self.pages_per_slot:
+            raise PagePoolExhausted(
+                f"{n_tokens} tokens need {need} pages, over the per-slot "
+                f"cap of {self.pages_per_slot} (max_seq)")
+        held = int(self._n_held[slot])
+        short = need - held
+        if short <= 0:
+            return
+        if short > len(self._free):
+            raise PagePoolExhausted(
+                f"slot {slot} needs {short} more page(s) for {n_tokens} "
+                f"tokens; {len(self._free)} free of "
+                f"{self.cfg.n_pages - 1} allocatable")
+        for j in range(held, need):
+            self.page_table[slot, j] = self._free.pop()
+        self._n_held[slot] = need
+        self.version += 1
+
+    def free(self, slot: int) -> None:
+        """Retire a slot: return its pages and zero its table row."""
+        for j in range(int(self._n_held[slot])):
+            self._free.append(int(self.page_table[slot, j]))
+        self.page_table[slot, :] = NULL_PAGE
+        self._n_held[slot] = 0
+        self.version += 1
