@@ -1,12 +1,21 @@
-"""Serving-throughput microbench: tokens/s through the continuous-batching
-engine at mixed request lengths, contiguous vs paged KV cache.
+"""Serving-level microbench: monolithic vs chunked prefill under a mixed
+long/short workload, contiguous vs paged KV cache.
 
-Emits one CSV row per (cache_kind) with tokens/s and the cache HBM footprint
-the layout implies — the paged row also runs a half-footprint oversubscribed
-pool to show admission control sustaining throughput with less memory.
+Beyond raw tokens/s, each row reports request-level latency percentiles —
+the numbers the Scheduler/Runtime split actually moves:
+
+  * **TTFT** (time to first token, p50/p95): monolithic prefill stalls
+    every decode slot while a long prompt prefills head-of-line; chunked
+    prefill bounds the stall to one budget-sized chunk per step.
+  * **TPOT** (time per output token after the first, p50/p95): how steady
+    decode remains while prompts are being prefilled in between.
+
+Set ``SERVING_BENCH_TINY=1`` for the CI smoke configuration (small model,
+few requests) — scripts/ci.sh runs it so scheduler regressions fail CI.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -20,15 +29,21 @@ from repro.models import module, transformer
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.paged import PagedCacheConfig
 
-N_SLOTS, MAX_SEQ, PAGE = 4, 256, 16
-MAX_NEW = 16
+TINY = bool(int(os.environ.get("SERVING_BENCH_TINY", "0")))
+N_SLOTS = 4
+MAX_SEQ = 64 if TINY else 256
+PAGE = 16
+CHUNK = 16 if TINY else 32
+MAX_NEW = 4 if TINY else 16
+N_REQ = 6 if TINY else 16
 
 
-def _requests(cfg, n=16, seed=0):
+def _requests(cfg, n=N_REQ, seed=0):
     rng = np.random.default_rng(seed)
     # bimodal mix: mostly short prompts plus a few long-context stragglers
-    lens = [int(rng.integers(4, 24)) if i % 4 else int(rng.integers(96, 160))
-            for i in range(n)]
+    long_lo, long_hi = (MAX_SEQ // 2, MAX_SEQ - MAX_NEW - 1)
+    lens = [int(rng.integers(4, 24)) if i % 4
+            else int(rng.integers(long_lo, long_hi)) for i in range(n)]
     return [Request(rid=i,
                     tokens=list(rng.integers(0, cfg.vocab_size, size=n_)),
                     max_new=MAX_NEW)
@@ -40,32 +55,57 @@ def _cache_bytes(engine) -> int:
                for b in jax.tree_util.tree_leaves(engine.caches))
 
 
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
 def _bench(params, cfg, label, **kw):
     engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
                            n_slots=N_SLOTS, max_seq=MAX_SEQ, **kw)
+    # warm THIS engine's executables (jit caches are per-instance) with the
+    # same length mix as the timed run, so the timed region measures
+    # scheduling, not XLA compiles — monolithic mode compiles its whole
+    # bucket family here, chunked its two executables (the executable
+    # counts in the emitted row keep that asymmetry visible)
+    engine.run(_requests(cfg))
     reqs = _requests(cfg)
-    engine.run(_requests(cfg, n=N_SLOTS, seed=1), max_steps=40)  # warm jits
     t0 = time.monotonic()
     done = engine.run(reqs)
     dt = time.monotonic() - t0
-    tok = sum(len(r.out) for r in done)
+    served = [r for r in done if r.error is None and r.t_first is not None]
+    tok = sum(len(r.out) for r in served)
+    ttft = [(r.t_first - r.t_submit) * 1e3 for r in served]
+    tpot = [(r.t_done - r.t_first) / max(len(r.out) - 1, 1) * 1e3
+            for r in served]
     us_per_tok = dt / max(tok, 1) * 1e6
-    common.emit(f"serving/{label}", us_per_tok,
-                f"tok_s={tok/dt:.1f};requests={len(done)};"
-                f"cache_mib={_cache_bytes(engine)/2**20:.2f}")
+    common.emit(
+        f"serving/{label}", us_per_tok,
+        f"tok_s={tok/dt:.1f};requests={len(done)};"
+        f"ttft_p50_ms={_pct(ttft, 50):.1f};ttft_p95_ms={_pct(ttft, 95):.1f};"
+        f"tpot_p50_ms={_pct(tpot, 50):.1f};tpot_p95_ms={_pct(tpot, 95):.1f};"
+        f"prefill_execs={engine.prefill_compilations};"
+        f"cache_mib={_cache_bytes(engine)/2**20:.2f}")
+    return engine
 
 
 def run():
-    print("# serving-level: continuous batching tokens/s at mixed request "
-          "lengths (CPU), contiguous vs paged KV cache")
+    print("# serving-level: continuous batching under a mixed long/short "
+          "workload (CPU) — monolithic vs chunked prefill, contiguous vs "
+          "paged KV cache; TTFT/TPOT in ms")
     cfg = shrink(get_config("qwen2-7b"))
     params = module.init_params(transformer.model_spec(cfg),
                                 jax.random.PRNGKey(0), jnp.float32)
-    _bench(params, cfg, "contiguous")
-    _bench(params, cfg, "paged", cache_kind="paged", page_size=PAGE)
-    half = max(2, PagedCacheConfig.default_pool(N_SLOTS, MAX_SEQ, PAGE) // 2)
-    _bench(params, cfg, "paged_oversubscribed_half_pool",
-           cache_kind="paged", page_size=PAGE, n_pages=half)
+    _bench(params, cfg, "monolithic", prefill_mode="monolithic")
+    eng = _bench(params, cfg, "chunked", prefill_mode="chunked", chunk=CHUNK)
+    assert eng.prefill_compilations == 1, eng.compilations  # CI tripwire
+    _bench(params, cfg, "chunked_paged", prefill_mode="chunked", chunk=CHUNK,
+           cache_kind="paged", page_size=PAGE)
+    if not TINY:
+        half = max(2, PagedCacheConfig.default_pool(N_SLOTS, MAX_SEQ,
+                                                    PAGE) // 2)
+        _bench(params, cfg, "chunked_paged_oversubscribed_half_pool",
+               prefill_mode="chunked", chunk=CHUNK, cache_kind="paged",
+               page_size=PAGE, n_pages=half)
 
 
 if __name__ == "__main__":

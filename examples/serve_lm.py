@@ -1,7 +1,8 @@
-"""Serving driver: batched requests through the continuous-batching engine
-(slot scheduling, bucketed prefill, batched decode) on a reduced qwen2-style
-model — once with the contiguous per-slot KV cache and once with the paged
-cache, checking the generated tokens are identical (docs/serving.md).
+"""Serving driver: batched requests through the Scheduler/Runtime engine
+(token-budgeted chunked prefill interleaved with batched decode) on a
+reduced qwen2-style model — once monolithic, once chunked, and once
+chunked+paged — checking the generated tokens are identical every way
+(docs/serving.md).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -17,14 +18,14 @@ from repro.models import module, transformer
 from repro.serve.engine import Request, ServingEngine
 
 
-def serve(params, cfg, reqs, **kw):
+def serve(params, cfg, reqs, label, **kw):
     engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
                            n_slots=4, max_seq=256, **kw)
     t0 = time.monotonic()
     done = sorted(engine.run(reqs), key=lambda r: r.rid)
     dt = time.monotonic() - t0
     tok = sum(len(r.out) for r in done)
-    print(f"{engine.cache_kind:10s}: {len(done)} requests, {tok} new tokens, "
+    print(f"{label:22s}: {len(done)} requests, {tok} new tokens, "
           f"{dt:.2f}s ({tok/dt:.1f} tok/s on 1 CPU core), "
           f"prefill executables: {engine.prefill_compilations}")
     return done
@@ -36,20 +37,25 @@ def main():
                                 jax.random.PRNGKey(0), jnp.float32)
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(0, cfg.vocab_size,
-                                 size=int(rng.integers(4, 64))))
+                                 size=int(rng.integers(4, 180))))
                for _ in range(12)]
 
     def reqs():
         return [Request(rid=i, tokens=list(p), max_new=16)
                 for i, p in enumerate(prompts)]
 
-    base = serve(params, cfg, reqs())
-    paged = serve(params, cfg, reqs(), cache_kind="paged", page_size=16)
-    assert [r.out for r in base] == [r.out for r in paged], \
+    mono = serve(params, cfg, reqs(), "monolithic",
+                 prefill_mode="monolithic")
+    chunked = serve(params, cfg, reqs(), "chunked")
+    paged = serve(params, cfg, reqs(), "chunked + paged",
+                  cache_kind="paged", page_size=16)
+    assert [r.out for r in mono] == [r.out for r in chunked], \
+        "chunked prefill must be token-identical"
+    assert [r.out for r in mono] == [r.out for r in paged], \
         "paged cache must be token-identical"
-    print("paged == contiguous, token for token")
-    for r in base[:4]:
-        print(f"  req {r.rid:2d} | prompt len {len(r.tokens):2d} -> {r.out}")
+    print("monolithic == chunked == chunked+paged, token for token")
+    for r in mono[:4]:
+        print(f"  req {r.rid:2d} | prompt len {len(r.tokens):3d} -> {r.out}")
 
 
 if __name__ == "__main__":

@@ -32,5 +32,10 @@ echo "doc links ok"
 echo "== examples/quickstart.py smoke =="
 python examples/quickstart.py
 
+# --- serving bench smoke: scheduler/chunked-prefill regressions fail here --
+echo "== benchmarks/serving_bench.py smoke (tiny config) =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" SERVING_BENCH_TINY=1 \
+  python benchmarks/serving_bench.py
+
 # --- full test suite -------------------------------------------------------
 exec python -m pytest -x -q "$@"

@@ -360,6 +360,90 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None,
     return out.astype(q.dtype)
 
 
+def attention_at_positions(q, k, v, q_pos, k_pos, *, window=0, scale=None):
+    """Dense masked attention with *explicit* absolute positions.
+
+    q: (B, Sq, H, dh) at positions ``q_pos`` (Sq,); k/v: (B, Skv, KV, dh) at
+    positions ``k_pos`` (Skv,).  Causal: query i sees key j iff
+    ``k_pos[j] <= q_pos[i]`` (and within ``window`` when set); negative
+    ``k_pos`` entries mark invalid keys (e.g. ring-buffer slots not yet
+    written) and are always masked.  XLA-only helper for the ring-buffer
+    chunked-prefill path, where keys are a gathered window rather than a
+    cache prefix.
+    """
+    B, Sq, H, dh = q.shape
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    k = _broadcast_kv(k, H)
+    v = _broadcast_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    ok = (k_pos[None, :] <= q_pos[:, None]) & (k_pos >= 0)[None, :]
+    if window:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_prefill_attention(q, k_cache, v_cache, q_offset, *, scale=None,
+                              cfg: FamousConfig = FamousConfig()):
+    """Chunked-prefill attention: a chunk of C query tokens at absolute
+    positions ``[q_offset, q_offset + C)`` attends causally to the resident
+    prefix *plus its own chunk*, both already written into the cache.
+
+    q: (B, C, H, dh); caches: (B, S_max, KV, dh) with the chunk's K/V rows
+    already written at ``[q_offset, q_offset + C)``.  ``q_offset`` is a
+    runtime scalar — one executable serves every (prompt length, chunk
+    index) pair, the paper's "reprogram loop bounds, never re-synthesise"
+    applied to prefill.  impl="pallas" streams key tiles through the
+    online-softmax kernel in kernels/decode; other impls run the dense
+    masked reference (the parity oracle).
+    """
+    B, C, H, dh = q.shape
+    Skv = k_cache.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    if cfg.impl == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+        return dec_ops.chunk_prefill_attention(q, k_cache, v_cache, q_offset,
+                                               scale=scale, block_k=cfg.tile_k)
+    k = _broadcast_kv(k_cache, H)
+    v = _broadcast_kv(v_cache, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(C)
+    ok = jnp.arange(Skv)[None, :] <= q_pos[:, None]
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_chunked_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
+                                    *, scale=None,
+                                    cfg: FamousConfig = FamousConfig()):
+    """Chunked-prefill attention against a *paged* KV cache.
+
+    q: (B, C, H, dh) at positions ``[q_offset, q_offset + C)``; pools:
+    (n_pages, page_size, KV, dh); page_table: (B, n_p) int32.  The chunk's
+    K/V must already be scattered into the slot's pages.  impl="pallas"
+    reuses the scalar-prefetched page-table BlockSpec machinery of
+    ``paged_decode_attention``; other impls gather the table into a
+    contiguous view and run the dense chunked reference.
+    """
+    B, C, H, dh = q.shape
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    if cfg.impl == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+        return dec_ops.paged_chunk_prefill_attention(q, k_pages, v_pages,
+                                                     page_table, q_offset,
+                                                     scale=scale)
+    from repro.kernels.decode.ref import gather_pages
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return chunked_prefill_attention(q, k, v, q_offset, scale=scale, cfg=cfg)
+
+
 def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
                            scale=None, cfg: FamousConfig = FamousConfig()):
     """One-token attention against a *paged* KV cache.

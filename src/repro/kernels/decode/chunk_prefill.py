@@ -1,0 +1,196 @@
+"""Chunked-prefill attention Pallas kernels (the serving prefill hot loop).
+
+A fixed-shape chunk of C query tokens at absolute positions
+``[q_offset, q_offset + C)`` attends causally to the resident prefix plus
+its own chunk, already written into the KV cache — contiguous per-slot
+stripes or a shared page pool.  One executable serves every (prompt
+length, chunk index) pair: the offset arrives as a runtime scalar and the
+page table is scalar-prefetched, exactly like ``paged_decode_attention``
+in decode_attn.py — the paper's "reprogram loop bounds, never
+re-synthesise" (§IV-C) applied to prefill.
+
+GQA rides along as in the decode kernels: the rows of the query block are
+the (group, chunk-position) pairs of one kv head — row ``g * C + c`` is
+query head ``g`` at chunk position ``c`` — so a single K/V tile DMA feeds
+every grouped query head and every chunk position at once (FAMOUS's
+shared-K-BRAM PE grouping).
+
+Correctness-over-speed note: the contiguous kernel's grid covers every
+key tile of the cache and relies on the ``k_pos <= q_pos`` mask; tiles
+entirely beyond the chunk contribute nothing.  Skipping them needs a
+dynamic grid (offset-dependent) — one executable per offset — which is
+exactly what this refactor removes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import pallas_compat as pc
+
+NEG_INF = -1e30
+
+
+def _chunk_prefill_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                          m_ref, l_ref, *, scale: float, block_k: int,
+                          n_k: int, chunk: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (group*C, dh)
+    k = k_ref[0].astype(jnp.float32)                  # (block_k, dh)
+    v = v_ref[0].astype(jnp.float32)
+    off = off_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % chunk
+    ok = k_pos <= off + c                              # causal incl. own chunk
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def chunk_prefill(q, k_cache, v_cache, q_offset, *, chunk: int,
+                  scale: float | None = None, block_k: int = 512,
+                  interpret: bool = False):
+    """q: (BKV, group*C, dh) with row = g*C + c; caches: (BKV, Skv, dh);
+    q_offset: () int32 runtime scalar.  Returns (BKV, group*C, dh)."""
+    BKV, rows, dh = q.shape
+    Skv = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    block_k = min(block_k, Skv)
+    assert Skv % block_k == 0, (Skv, block_k)
+    assert rows % chunk == 0, (rows, chunk)
+    n_k = Skv // block_k
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1, 1)
+    kernel = functools.partial(_chunk_prefill_kernel, scale=float(scale),
+                               block_k=block_k, n_k=n_k, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BKV, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, ik: (0, 0), memory_space=pc.SMEM),
+            pl.BlockSpec((1, rows, dh), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, dh), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, rows, dh), q.dtype),
+        scratch_shapes=[
+            pc.VMEM((rows, dh), jnp.float32),
+            pc.VMEM((rows, 1), jnp.float32),
+            pc.VMEM((rows, 1), jnp.float32),
+        ],
+        compiler_params=pc.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(off, q, k_cache, v_cache)
+
+
+def _paged_chunk_prefill_kernel(off_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                                acc_ref, m_ref, l_ref, *, scale: float,
+                                page_size: int, n_p: int, chunk: int):
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (group*C, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page_size, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    off = off_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    k_pos = ip * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % chunk
+    ok = k_pos <= off + c
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ip == n_p - 1)
+    def _flush():
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_chunk_prefill(q, k_pages, v_pages, page_table, q_offset, *,
+                        chunk: int, scale: float | None = None,
+                        interpret: bool = False):
+    """Page-table-indexed chunked-prefill attention.
+
+    q: (B, KV, group*C, dh) with row = g*C + c; pools: (n_pages, page_size,
+    KV, dh); page_table: (B, n_p) int32; q_offset: () int32 runtime scalar.
+    Returns (B, KV, group*C, dh).  The page table and offset are
+    scalar-prefetched — the K/V BlockSpec index_maps read
+    ``page_table[b, ip]`` to aim each page DMA, so the grid program never
+    changes shape when prompts grow or chunks advance.
+    """
+    B, KV, rows, dh = q.shape
+    page_size = k_pages.shape[1]
+    n_p = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    assert rows % chunk == 0, (rows, chunk)
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    kernel = functools.partial(_paged_chunk_prefill_kernel, scale=float(scale),
+                               page_size=page_size, n_p=n_p, chunk=chunk)
+    grid_spec = pc.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # q_offset, page_table
+        grid=(B, KV, n_p),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, dh),
+                         lambda b, g, ip, off, pt: (b, g, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, g, ip, off, pt: (pt[b, ip], 0, g, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, g, ip, off, pt: (pt[b, ip], 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, dh),
+                               lambda b, g, ip, off, pt: (b, g, 0, 0)),
+        scratch_shapes=[
+            pc.VMEM((rows, dh), jnp.float32),
+            pc.VMEM((rows, 1), jnp.float32),
+            pc.VMEM((rows, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, rows, dh), q.dtype),
+        compiler_params=pc.compiler_params("parallel", "parallel",
+                                           "arbitrary"),
+        interpret=interpret,
+    )(off, page_table.astype(jnp.int32), q, k_pages, v_pages)

@@ -1,5 +1,5 @@
-"""Jitted wrapper for decode attention: (B, 1, H, dh) model layout to the
-kernel's (B·KV, group, dh) layout."""
+"""Jitted wrappers for the decode / chunked-prefill attention kernels:
+(B, S, H, dh) model layout to the kernels' GQA-flattened row layouts."""
 from __future__ import annotations
 
 import functools
@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode import chunk_prefill as chunk_kernels
 from repro.kernels.decode import decode_attn
 
 
@@ -50,3 +51,43 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
                                              page_table, cache_len,
                                              scale=scale, interpret=interpret)
     return out.reshape(B, 1, H, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def chunk_prefill_attention(q, k_cache, v_cache, q_offset, *, scale=None,
+                            block_k=512, interpret=None):
+    """q: (B, C, H, dh) at positions [q_offset, q_offset+C); caches:
+    (B, Skv, KV, dh) with the chunk rows already written; q_offset: ()
+    int32 runtime scalar.  Returns (B, C, H, dh)."""
+    B, C, H, dh = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    # (B, C, H, dh) -> (B, KV, group, C, dh) -> (B*KV, group*C, dh)
+    qf = (q.reshape(B, C, KV, group, dh).transpose(0, 2, 3, 1, 4)
+          .reshape(B * KV, group * C, dh))
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
+    out = chunk_kernels.chunk_prefill(qf, kf, vf, q_offset, chunk=C,
+                                      scale=scale, block_k=block_k,
+                                      interpret=interpret)
+    return (out.reshape(B, KV, group, C, dh).transpose(0, 3, 1, 2, 4)
+            .reshape(B, C, H, dh))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_chunk_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
+                                  *, scale=None, interpret=None):
+    """q: (B, C, H, dh); pools: (n_pages, page_size, KV, dh); page_table:
+    (B, n_p) int32; q_offset: () int32.  Returns (B, C, H, dh)."""
+    B, C, H, dh = q.shape
+    KV = k_pages.shape[2]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    qf = (q.reshape(B, C, KV, group, dh).transpose(0, 2, 3, 1, 4)
+          .reshape(B, KV, group * C, dh))
+    out = chunk_kernels.paged_chunk_prefill(qf, k_pages, v_pages, page_table,
+                                            q_offset, chunk=C, scale=scale,
+                                            interpret=interpret)
+    return (out.reshape(B, KV, group, C, dh).transpose(0, 3, 1, 2, 4)
+            .reshape(B, C, H, dh))

@@ -37,6 +37,37 @@ def gather_pages(pages, page_table):
     return g.reshape(g.shape[0], n_p * ps, *pages.shape[2:])
 
 
+def chunk_prefill_reference(q, k_cache, v_cache, q_offset, *,
+                            scale: float | None = None):
+    """Dense oracle for the chunked-prefill kernels.
+
+    q: (B, C, H, dh) at positions [q_offset, q_offset+C); caches:
+    (B, Skv, KV, dh) with the chunk rows already written.  Query i sees
+    cache position j iff j <= q_offset + i.  Returns (B, C, H, dh).
+    """
+    B, C, H, dh = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    k = jnp.repeat(k_cache, H // KV, axis=2)
+    v = jnp.repeat(v_cache, H // KV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    ok = jnp.arange(Skv)[None, :] <= (q_offset + jnp.arange(C))[:, None]
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_chunk_prefill_reference(q, k_pages, v_pages, page_table, q_offset,
+                                  *, scale: float | None = None):
+    """Gather-based oracle for the paged chunked-prefill kernel."""
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return chunk_prefill_reference(q, k, v, q_offset, scale=scale)
+
+
 def paged_decode_reference(q, k_pages, v_pages, page_table, cache_len, *,
                            scale: float | None = None):
     """Gather-based oracle for the paged kernel.

@@ -1,8 +1,9 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Drives the continuous-batching engine over a synthetic request stream on a
-reduced config (CPU container); the decode/prefill step functions are the
-same ones the multi-pod dry-run lowers at production shapes.
+Drives the Scheduler/Runtime continuous-batching engine over a synthetic
+request stream on a reduced config (CPU container); the chunked-prefill /
+decode step functions are the same ones the multi-pod dry-run lowers at
+production shapes.
 """
 from __future__ import annotations
 
@@ -27,6 +28,24 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-mode", choices=("chunked", "monolithic"),
+                    default="chunked",
+                    help="chunked: fixed-shape prefill chunks interleaved "
+                         "with decode under the token budget (O(1) "
+                         "executables); monolithic: whole-prompt prefill at "
+                         "admission (legacy comparison baseline)")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk length (must divide max-seq)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-step token budget for the scheduler; "
+                         "0 = slots + chunk (one chunk per step while "
+                         "decoding). Larger = faster TTFT for long prompts, "
+                         "burstier decode (see docs/serving.md)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for every request "
+                         "(0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k filter (0 = full vocab)")
     ap.add_argument("--cache-kind", choices=("contiguous", "paged"),
                     default="contiguous",
                     help="KV-cache layout: per-slot max_seq stripes, or a "
@@ -48,27 +67,37 @@ def main():
                            n_slots=args.slots, max_seq=args.max_seq,
                            cache_kind=args.cache_kind,
                            page_size=args.page_size,
-                           n_pages=args.n_pages or None)
+                           n_pages=args.n_pages or None,
+                           prefill_mode=args.prefill_mode,
+                           chunk=args.chunk,
+                           token_budget=args.token_budget)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     tokens=list(rng.integers(0, cfg.vocab_size,
                                              size=rng.integers(4, 32))),
-                    max_new=args.max_new)
+                    max_new=args.max_new,
+                    temperature=args.temperature, top_k=args.top_k,
+                    seed=args.seed + i)
             for i in range(args.requests)]
     t0 = time.monotonic()
     done = engine.run(reqs)
     dt = time.monotonic() - t0
     tok = sum(len(r.out) for r in done)
+    census = engine.compilations
     print(f"served {len(done)} requests, {tok} tokens in {dt:.2f}s "
-          f"({tok/dt:.1f} tok/s), prefill executables: "
-          f"{engine.prefill_compilations} (bucketed={engine.bucketed}, "
-          f"cache={engine.cache_kind})")
+          f"({tok/dt:.1f} tok/s), executables: prefill={census['prefill']} "
+          f"decode={census['decode']} clear={census['clear']} "
+          f"(mode={args.prefill_mode}, cache={engine.cache_kind})")
     if engine.paged:
         print(f"page pool: {engine.pcfg.n_pages} pages x "
               f"{engine.pcfg.page_size} tokens, "
               f"{engine.alloc.free_pages} free after drain")
     for r in done[:3]:
-        print(f"  req {r.rid}: prompt[:6]={r.tokens[:6]} -> out={r.out}")
+        f = engine.sched.fairness(r.rid)
+        ttft = (r.t_first - r.t_submit) * 1e3 if r.t_first else float("nan")
+        print(f"  req {r.rid}: prompt[:6]={r.tokens[:6]} -> out={r.out} "
+              f"(ttft={ttft:.0f}ms, prefill_toks={f.get('prefill_tokens', 0)},"
+              f" preemptions={f.get('preemptions', 0)})")
 
 
 if __name__ == "__main__":

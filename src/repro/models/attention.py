@@ -121,6 +121,99 @@ def apply_attn_prefill(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
     return o, cache
 
 
+def apply_attn_chunk(p: dict, x: jax.Array, cache: dict, slot, offset,
+                     n_valid, cfg: ModelConfig, fcfg: famous.FamousConfig, *,
+                     window: int = 0):
+    """Chunked prefill for one slot of the *batched* cache.
+
+    x: (1, C, D) — the chunk at absolute positions [offset, offset+C)
+    (``offset`` a runtime scalar); cache: {"k","v"} (n_slots, S|ring, kv,
+    dh).  Writes the chunk's K/V straight into the slot (no batch-1
+    round-trip) and attends against resident prefix + own chunk.  Pad
+    positions at the chunk tail write junk K/V beyond the prompt, which is
+    never read: causal masking excludes them during prefill and decode
+    overwrites position n-1 onwards.  Returns (out (1, C, D), new cache).
+    """
+    C = x.shape[1]
+    positions = offset + jnp.arange(C)
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    if not window:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (slot, offset, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (slot, offset, 0, 0))
+        k_slot = jax.lax.dynamic_slice(ck, (slot, 0, 0, 0),
+                                       (1,) + ck.shape[1:])
+        v_slot = jax.lax.dynamic_slice(cv, (slot, 0, 0, 0),
+                                       (1,) + cv.shape[1:])
+        out = famous.chunked_prefill_attention(q, k_slot, v_slot, offset,
+                                               cfg=fcfg)
+        cache = {"k": ck, "v": cv}
+    else:
+        # Ring buffer: gather the pre-chunk ring in *position order*
+        # (positions offset-ring .. offset-1; ring slot = pos % ring;
+        # negative / not-yet-written positions are masked by
+        # attention_at_positions), attend over [gathered ring ‖ chunk],
+        # then write the chunk's last min(C, ring) positions into the ring.
+        ring = cache["k"].shape[1]
+        kv, dh = cache["k"].shape[2], cache["k"].shape[3]
+        row_k = jax.lax.dynamic_slice(cache["k"], (slot, 0, 0, 0),
+                                      (1, ring, kv, dh))[0]
+        row_v = jax.lax.dynamic_slice(cache["v"], (slot, 0, 0, 0),
+                                      (1, ring, kv, dh))[0]
+        prev_pos = offset - ring + jnp.arange(ring)
+        order = prev_pos % ring
+        keys = jnp.concatenate([row_k[order][None].astype(k.dtype), k], axis=1)
+        vals = jnp.concatenate([row_v[order][None].astype(v.dtype), v], axis=1)
+        k_pos = jnp.concatenate([prev_pos, positions])
+        out = famous.attention_at_positions(q, keys, vals, positions, k_pos,
+                                            window=window)
+        # Write only the last min(n_valid, ring) *real* chunk positions —
+        # pad-tail junk must not clobber live window slots, and positions
+        # older than the final ring window would alias newer ones.  Masked
+        # writes are redirected to an out-of-bounds index and dropped; the
+        # surviving indices are distinct, so scatter order is irrelevant.
+        c_arr = jnp.arange(C)
+        write_ok = (c_arr < n_valid) & (c_arr >= n_valid - ring)
+        idx = jnp.where(write_ok, positions % ring, ring)
+        row_k = row_k.at[idx].set(k[0].astype(row_k.dtype), mode="drop")
+        row_v = row_v.at[idx].set(v[0].astype(row_v.dtype), mode="drop")
+        cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], row_k[None],
+                                              (slot, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], row_v[None],
+                                              (slot, 0, 0, 0)),
+        }
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+    return o, cache
+
+
+def apply_attn_chunk_paged(p: dict, x: jax.Array, cache: dict, page_table,
+                           slot, offset, cfg: ModelConfig,
+                           fcfg: famous.FamousConfig):
+    """Chunked prefill against the shared page pool.
+
+    x: (1, C, D); cache: {"k","v"} pools (n_pages, page_size, kv, dh);
+    page_table: (n_slots, n_p) int32.  The chunk's K/V scatter into the
+    slot's pages (position p -> page ``page_table[slot, p // ps]``, offset
+    ``p % ps``); pad positions past the reserved pages land on the null
+    page, which absorbs them by convention.  Returns (out, new cache).
+    """
+    C = x.shape[1]
+    positions = offset + jnp.arange(C)
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    ps = cache["k"].shape[1]
+    pt_row = page_table[slot]                          # (n_p,)
+    pids = pt_row[positions // ps]
+    offs = positions % ps
+    ck = cache["k"].at[pids, offs].set(k[0].astype(cache["k"].dtype))
+    cv = cache["v"].at[pids, offs].set(v[0].astype(cache["v"].dtype))
+    out = famous.paged_chunked_prefill_attention(q, ck, cv, pt_row[None],
+                                                 offset, cfg=fcfg)
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+    return o, {"k": ck, "v": cv}
+
+
 def apply_attn_decode(p: dict, x: jax.Array, cache: dict, cache_len,
                       cfg: ModelConfig, fcfg: famous.FamousConfig, *,
                       window: int = 0):

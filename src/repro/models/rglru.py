@@ -53,11 +53,24 @@ def _decay(p, rg):
     return a, jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
 
 
-def rglru_scan(p, xc):
-    """xc: (B, S, R) conv output -> recurrence output (B, S, R) float32."""
+def rglru_scan(p, xc, h0=None, n_valid=None):
+    """xc: (B, S, R) conv output -> recurrence output (B, S, R) float32.
+
+    h0: optional (B, R) carried state (chunked prefill) — injected as
+    ``h_1 = a_1 h0 + b_1``.  n_valid: optional () int32 — positions
+    >= n_valid are pad: their update is masked to the identity
+    (a=1, b=0), so ``h[:, -1]`` is exactly the state after the last
+    *real* token.
+    """
     rg, ig = _gates(p, xc)
     a, gain = _decay(p, rg)
     b = gain * (ig * xc.astype(jnp.float32))
+    if n_valid is not None:
+        valid = (jnp.arange(xc.shape[1]) < n_valid)[None, :, None]
+        a = jnp.where(valid, a, 1.0)
+        b = jnp.where(valid, b, 0.0)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
 
     def combine(l, r_):
         al, bl = l
@@ -78,9 +91,11 @@ def rglru_step(p, xc_t, h_prev):
     return h
 
 
-def _conv1d(p, x, state=None):
+def _conv1d(p, x, state=None, n_valid=None):
     """Causal depthwise temporal conv, width W. x: (B, S, R).
-    state: (B, W-1, R) previous inputs for decode; returns (y, new_state)."""
+    state: (B, W-1, R) previous inputs for decode; returns (y, new_state).
+    n_valid: optional () int32 — the carried state is the W-1 inputs ending
+    at the last *real* position (pad tail excluded)."""
     w = p["conv_w"].astype(jnp.float32)  # (W, R)
     W = w.shape[0]
     xf = x.astype(jnp.float32)
@@ -91,7 +106,10 @@ def _conv1d(p, x, state=None):
     xp = jnp.concatenate([pad, xf], axis=1)
     y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
     y = y + p["conv_b"].astype(jnp.float32)
-    new_state = xp[:, -(W - 1):]
+    if n_valid is None:
+        new_state = xp[:, -(W - 1):]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, n_valid, W - 1, axis=1)
     return y, new_state
 
 
@@ -128,6 +146,23 @@ def apply_rglru(p: dict, x: jax.Array, cfg: ModelConfig,
         return out
     new_cache = {"h": h[:, -1], "conv": conv_state}
     return out, new_cache
+
+
+def apply_rglru_chunk(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
+                      n_valid):
+    """Chunked prefill: like ``apply_rglru(cache=...)`` but *carrying* the
+    recurrent state h across chunks (fresh prefill starts from zero; chunk
+    c > 0 resumes from the slot's state) and masking pad positions
+    >= n_valid so their state updates are the identity.  x: (1, C, D);
+    cache: {"h","conv"}.  Returns (out, new cache)."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p["w_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dr->bsr", x, p["w_gate"].astype(x.dtype))
+    xc, conv_state = _conv1d(p, xb, cache["conv"], n_valid=n_valid)
+    h = rglru_scan(p, xc, h0=cache["h"], n_valid=n_valid)
+    y = jax.nn.gelu(gate.astype(jnp.float32)) * h
+    out = jnp.einsum("bsr,rd->bsd", y.astype(x.dtype),
+                     p["w_out"].astype(x.dtype))
+    return out, {"h": h[:, -1], "conv": conv_state}
 
 
 def apply_rglru_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig):

@@ -198,6 +198,37 @@ def apply_rwkv_time_mix(p, x, cfg: ModelConfig, cache=None, chunk: int = 64):
     return y, {"s": s_fin, "x_tm": x[:, -1]}
 
 
+def apply_rwkv_time_mix_chunk(p, x, cache, cfg: ModelConfig, n_valid,
+                              chunk: int = 64):
+    """Chunked prefill: carry (s, x_tm) across fixed-shape chunks.
+
+    x: (1, C, D) — only the first n_valid positions are real.  Pad
+    positions are masked so they cannot pollute the carried state: their
+    k is zeroed (no kv outer-product contribution) and their log-decay is
+    zeroed (w = 1, identity decay), so ``s_final`` is exactly the state
+    after the last real token; the token-shift state becomes
+    ``x[:, n_valid-1]``.  Pad *outputs* are junk and discarded upstream.
+    """
+    B, S, D = x.shape
+    h, dh = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    x_prev = _token_shift(x, cache["x_tm"])
+    r, k, v, g, logw = _time_mix_qkvwg(p, x, x_prev)
+    valid = (jnp.arange(S) < n_valid)[None, :, None]
+    k = jnp.where(valid, k, jnp.zeros((), k.dtype))
+    logw = jnp.where(valid, logw, 0.0)
+    rh, kh, vh = (_heads(t, h, dh) for t in (r, k, v))
+    wh = _heads(logw, h, dh)
+    out, s_fin = wkv6_chunked(rh, kh, vh, wh, p["u"].astype(jnp.float32),
+                              s0=cache["s"], chunk=chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, D)
+    out = layers.apply_norm({"scale": p["ln_scale"], "bias": p["ln_bias"]},
+                            out.astype(x.dtype), "layernorm")
+    out = out * jax.nn.silu(g)
+    y = jnp.einsum("bsd,df->bsf", out, p["w_o"].astype(x.dtype))
+    x_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)[:, 0]
+    return y, {"s": s_fin, "x_tm": x_last}
+
+
 def apply_rwkv_time_mix_decode(p, x, cache, cfg: ModelConfig):
     B, _, D = x.shape
     h, dh = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim

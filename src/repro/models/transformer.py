@@ -328,14 +328,35 @@ def prefill(params, inputs, caches, cfg: ModelConfig,
     return logits_fn(params, x[:, -1:], cfg)[:, 0], new_caches
 
 
+def _mask_state_update(kind: str, new_cache, old_cache, active):
+    """Keep recurrent state frozen for non-``active`` slots.
+
+    The decode executable runs over *every* slot each step (fixed batch);
+    slots that are free or mid-chunked-prefill produce junk.  Junk K/V
+    writes are harmless (masked by cache_len / overwritten by the next
+    chunk), but recurrent state (RG-LRU h/conv, RWKV s/x_tm/x_cm) is read
+    unconditionally and carried across prefill chunks — a junk update
+    between chunks would corrupt it, so it only commits where ``active``.
+    """
+    if active is None or kind in (ATTN, LOCAL_ATTN):
+        return new_cache
+    return jax.tree_util.tree_map(
+        lambda nc, oc: jnp.where(
+            active.reshape((active.shape[0],) + (1,) * (nc.ndim - 1)),
+            nc, oc.astype(nc.dtype)),
+        new_cache, old_cache)
+
+
 def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
                 fcfg: FamousConfig = FamousConfig(), compute_dtype=None,
-                page_table=None):
+                page_table=None, active=None):
     """tokens: (B,) int32 (or (B, D) embeddings); cache_len: (B,).
     page_table: optional (B, pages_per_slot) int32 — when given, global
     attention layers treat their caches as shared page pools (see
     ``make_caches(cache_kind="paged")``); when None, caches are the
-    contiguous per-slot baseline.  Returns (logits (B, vocab), new caches)."""
+    contiguous per-slot baseline.  active: optional (B,) bool — slots not
+    decoding this step (free, or mid-chunked-prefill) keep their recurrent
+    state untouched.  Returns (logits (B, vocab), new caches)."""
     dtype = compute_dtype or params["final_norm"]["scale"].dtype
     inputs = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
     x = _embed_inputs(params, inputs, cfg, dtype)
@@ -345,20 +366,125 @@ def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
         new_caches = {}
         for i, kind in enumerate(cfg.pattern_unit):
             key = f"pos{i}"
-            x, new_caches[key] = _apply_block_decode(
+            x, new = _apply_block_decode(
                 kind, unit_params[key], x, unit_cache[key], cache_len, cfg,
                 fcfg, page_table)
+            new_caches[key] = _mask_state_update(kind, new, unit_cache[key],
+                                                 active)
         return x, new_caches
 
     x, new_block_caches = jax.lax.scan(
         unit_body, x, (params["blocks"], caches["blocks"]))
     new_caches = {"blocks": new_block_caches}
     for i, kind in enumerate(cfg.tail_layers):
-        x, new_caches[f"tail{i}"] = _apply_block_decode(
+        x, new = _apply_block_decode(
             kind, params[f"tail{i}"], x, caches[f"tail{i}"], cache_len, cfg,
             fcfg, page_table)
+        new_caches[f"tail{i}"] = _mask_state_update(kind, new,
+                                                    caches[f"tail{i}"], active)
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)
     return logits_fn(params, x, cfg)[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# serving: chunked prefill (the Scheduler/Runtime hot path)
+# ---------------------------------------------------------------------------
+
+
+def _read_slot_state(cache, slot, offset):
+    """Slot row of a per-slot state tree, zeroed when ``offset == 0`` so a
+    reused slot cannot leak the previous occupant's recurrent state into a
+    fresh sequence (chunk 0 starts from zero state; later chunks carry)."""
+    def read(buf):
+        row = jax.lax.dynamic_slice(buf, (slot,) + (0,) * (buf.ndim - 1),
+                                    (1,) + buf.shape[1:])
+        return jnp.where(offset > 0, row, jnp.zeros_like(row))
+
+    return jax.tree_util.tree_map(read, cache)
+
+
+def _write_slot_state(cache, sub, slot):
+    return jax.tree_util.tree_map(
+        lambda d, s: jax.lax.dynamic_update_slice(
+            d, s.astype(d.dtype), (slot,) + (0,) * (d.ndim - 1)),
+        cache, sub)
+
+
+def _apply_block_chunk(kind, p, x, cache, slot, offset, n_valid, cfg, fcfg,
+                       page_table):
+    n = functools.partial(layers.apply_norm, kind=cfg.norm)
+    if kind == ATTN and page_table is not None:
+        a, cache = attention.apply_attn_chunk_paged(
+            p["attn"], n(p["ln1"], x), cache, page_table, slot, offset, cfg,
+            fcfg)
+        x = x + a
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.window if kind == LOCAL_ATTN else 0
+        a, cache = attention.apply_attn_chunk(
+            p["attn"], n(p["ln1"], x), cache, slot, offset, n_valid, cfg,
+            fcfg, window=window)
+        x = x + a
+        return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
+    if kind == RGLRU:
+        sub = _read_slot_state(cache, slot, offset)
+        a, sub = rglru.apply_rglru_chunk(p["rec"], n(p["ln1"], x), cfg, sub,
+                                         n_valid)
+        x = x + a
+        return (x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg),
+                _write_slot_state(cache, sub, slot))
+    if kind == RWKV6:
+        sub = _read_slot_state(cache, slot, offset)
+        a, c_tm = rwkv6.apply_rwkv_time_mix_chunk(
+            p["tm"], n(p["ln1"], x), {k: sub[k] for k in ("s", "x_tm")}, cfg,
+            n_valid)
+        x = x + a
+        h = n(p["ln2"], x)
+        y, _ = rwkv6.apply_channel_mix(p["cm"], h, cfg, cache_x=sub["x_cm"])
+        x_cm = jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)[:, 0]
+        sub = {"s": c_tm["s"], "x_tm": c_tm["x_tm"], "x_cm": x_cm}
+        return x + y, _write_slot_state(cache, sub, slot)
+    raise ValueError(kind)
+
+
+def prefill_chunk(params, tokens, caches, slot, offset, n_valid,
+                  cfg: ModelConfig, fcfg: FamousConfig = FamousConfig(),
+                  page_table=None, compute_dtype=None):
+    """One fixed-shape prefill chunk for a single slot of the batched caches.
+
+    tokens: (1, C) int32 at absolute positions [offset, offset+C); only the
+    first ``n_valid`` are real (the pad tail's state updates are masked to
+    the identity, and its junk K/V is never read).  Writes K/V — contiguous
+    stripe, ring buffer, or page pool — and recurrent state for ``slot``
+    directly into the batched caches, replacing the old
+    build-batch-1-then-scatter round trip, and carries recurrent state
+    across chunks (``offset == 0`` starts from zero state).  ``slot``,
+    ``offset`` and ``n_valid`` are runtime scalars: ONE executable serves
+    every (slot, prompt length, chunk index) triple.  Returns the new
+    caches only — prefill logits are dead weight (generation restarts by
+    decoding the last prompt token), so the LM head is never computed.
+    """
+    dtype = compute_dtype or params["final_norm"]["scale"].dtype
+    x = _embed_inputs(params, tokens, cfg, dtype)
+
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern_unit):
+            key = f"pos{i}"
+            x, new_caches[key] = _apply_block_chunk(
+                kind, unit_params[key], x, unit_cache[key], slot, offset,
+                n_valid, cfg, fcfg, page_table)
+        return x, new_caches
+
+    x, new_block_caches = jax.lax.scan(
+        unit_body, x, (params["blocks"], caches["blocks"]))
+    new_caches = {"blocks": new_block_caches}
+    for i, kind in enumerate(cfg.tail_layers):
+        x, new_caches[f"tail{i}"] = _apply_block_chunk(
+            kind, params[f"tail{i}"], x, caches[f"tail{i}"], slot, offset,
+            n_valid, cfg, fcfg, page_table)
+    return new_caches
 
 
 # ---------------------------------------------------------------------------

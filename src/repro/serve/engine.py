@@ -1,41 +1,44 @@
-"""Serving engine: slot-based continuous batching with shape-bucketed
-prefill — the runtime-programmability story (paper §IV-C) end to end.
+"""Serving engine, split into Scheduler (policy) + Runtime (this class).
 
-One decode executable (batch = n_slots, the synthesis-time maximum) serves
-every request mix; prefill compiles once per sequence-length *bucket*
-(pow-2 rounding, right-padded), so arbitrary request lengths reuse a handful
-of executables — the TPU analogue of "reprogram loop bounds from the µB,
-never re-synthesise".
+The paper's runtime-programmability story (§IV-C) taken to its serving
+conclusion: the Runtime owns exactly **two** hot executables —
 
-Bucket-padded prefill correctness: padded suffix tokens write junk K/V at
-positions ≥ n−1, but ``cache_len`` masks every future decode step to
-positions < len, and the next real token overwrites slot n−1.  (The logits
-of the prefill are discarded; generation restarts by decoding the last
-prompt token.)  Architectures with recurrent state (RG-LRU / RWKV), where
-junk tokens would pollute the carried state, prefill at exact length
-instead — the engine picks the strategy from the config.
+  * one **fixed-shape chunked-prefill step** (``transformer.prefill_chunk``:
+    ``chunk`` tokens of one slot, at a runtime offset, written straight
+    into the slot's rows/pages of the batched caches), and
+  * one **decode step** (batch = ``n_slots``, the synthesis-time maximum),
 
-KV-cache layout is a config switch (``cache_kind``):
+so compilation count is O(1) for *any* prompt-length mix — no pow-2
+prefill-bucket family, no per-length executables for recurrent
+architectures.  Everything that varies per request — slot, offset, chunk
+fill, lengths, page tables, sampling params — arrives as plain integer
+operands: the TPU analogue of "reprogram the µB's loop bounds, never
+re-synthesise".
 
-  * ``"contiguous"`` — each slot owns a ``max_seq`` stripe of every
-    attention layer's cache (the seed baseline; memory = n_slots × max_seq
-    regardless of what is actually resident).
-  * ``"paged"``      — global-attention layers share a page pool; slots
-    hold pages through a host-side :class:`~repro.serve.paged.PageAllocator`
-    and the decode executable receives the page table as a plain int32
-    operand each step (same executable for every allocation state).  Memory
-    scales with live tokens and admission control degrades cleanly: requests
-    the pool cannot back yet wait in the pending queue, sequences that run
-    out of pages mid-decode are preempted youngest-first and resumed later
-    (token-identically — resuming is just a longer prefill), and impossible
-    requests raise :class:`~repro.serve.paged.PagePoolExhausted` (or come
-    back with ``req.error`` from :meth:`run`).  docs/serving.md walks
-    through the lifecycle.
+All *policy* — admission, the per-step token budget, chunked-prefill
+interleaving with decode, youngest-first preemption, fairness accounting —
+lives in the pure-python :class:`~repro.serve.scheduler.Scheduler`.  Each
+:meth:`step` executes one :class:`~repro.serve.scheduler.StepPlan`:
+budgeted prefill chunks first, then one batched decode across the
+decoding slots.  A long prompt thus prefills between other requests'
+decode steps (no head-of-line blocking), and prompts are no longer
+limited to what one prefill call can hold — only by cache capacity
+(``max_seq``).
+
+``prefill_mode="monolithic"`` keeps the legacy whole-prompt-at-admission
+path (pow-2 bucketed, exact-length for recurrent archs) as the
+comparison baseline for parity tests and benchmarks.
+
+KV-cache layout remains a config switch (``cache_kind``): ``"contiguous"``
+per-slot stripes or the ``"paged"`` shared pool with host-side
+:class:`~repro.serve.paged.PageAllocator` admission control (see
+docs/serving.md and serve/paged.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -46,8 +49,11 @@ from repro.configs.base import ATTN, LOCAL_ATTN, ModelConfig
 from repro.core.famous import FamousConfig
 from repro.core.flexible import next_pow2
 from repro.models import transformer
+from repro.serve import sampling
 from repro.serve.paged import (PageAllocator, PagedCacheConfig,
                                PagePoolExhausted)
+from repro.serve.scheduler import (DECODE, FREE, PREFILL, Scheduler,
+                                   SchedulerConfig)
 
 
 @dataclasses.dataclass
@@ -55,17 +61,41 @@ class Request:
     rid: int
     tokens: list
     max_new: int = 16
+    # per-request sampling params: temperature <= 0 -> greedy (default);
+    # top_k == 0 -> full-vocab; seeded runs are reproducible regardless of
+    # batch composition / slot placement (see serve/sampling.py).  seed=None
+    # falls back to the request id, so unseeded sampling requests draw
+    # *different* noise instead of all sharing seed 0.
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: Optional[int] = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None  # set when the page pool can never back it
+    # wall-clock marks for TTFT/TPOT accounting (set by the engine)
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+def _jit_cache_size(fn) -> int:
+    try:
+        return fn._cache_size()
+    except Exception:                      # pragma: no cover - jax-internal API
+        return -1
 
 
 class ServingEngine:
+    """The Runtime: executes the Scheduler's plans against device state."""
+
     def __init__(self, params, cfg: ModelConfig, fcfg: FamousConfig,
                  n_slots: int = 4, max_seq: int = 256, dtype=jnp.float32,
                  cache_kind: str = "contiguous", page_size: int = 16,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 prefill_mode: str = "chunked", chunk: int = 32,
+                 token_budget: int = 0):
         assert cache_kind in ("contiguous", "paged"), cache_kind
+        assert prefill_mode in ("chunked", "monolithic"), prefill_mode
         self.params = params
         self.cfg = cfg
         self.fcfg = fcfg
@@ -74,6 +104,15 @@ class ServingEngine:
         self.dtype = dtype
         self.cache_kind = cache_kind
         self.paged = cache_kind == "paged"
+        self.chunked = prefill_mode == "chunked"
+        self.chunk = min(chunk, max_seq)
+        if self.chunked:
+            # pads stay inside the cache (positions < ceil(target/C)*C <=
+            # max_seq) and the wkv6 chunked form needs S % min(64, S) == 0
+            assert max_seq % self.chunk == 0, (max_seq, self.chunk)
+            assert self.chunk <= 64 or self.chunk % 64 == 0, self.chunk
+        self.sched = Scheduler(n_slots, SchedulerConfig(
+            chunk=self.chunk, token_budget=token_budget))
         if self.paged:
             assert max_seq % page_size == 0, (max_seq, page_size)
             if n_pages is None:  # drop-in capacity; pass n_pages to oversubscribe
@@ -87,26 +126,27 @@ class ServingEngine:
         else:
             self.caches = transformer.make_caches(cfg, n_slots, max_seq, dtype)
         self.cache_len = jnp.zeros((n_slots,), jnp.int32)
-        self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.last_token = jnp.zeros((n_slots,), jnp.int32)
-        # admission order per slot (youngest-first preemption policy) and the
-        # queue of preempted requests awaiting re-admission
-        self._admit_counter = 0
-        self._slot_admit = [-1] * n_slots
-        self._preempted: list[Request] = []
+        self._slot_seq: list[Optional[list]] = [None] * n_slots
         self._failed: list[Request] = []
         self._pt_version = -1          # device page-table cache key
         self._pt_device = None
-        self._prefill_exec: dict[int, callable] = {}
+        # -- the executables ----------------------------------------------
+        self._prefill_exec: dict[int, callable] = {}    # monolithic only
+        self._prefill_chunk_exec = jax.jit(functools.partial(
+            transformer.prefill_chunk, cfg=cfg, fcfg=fcfg))
         self._decode = jax.jit(
             functools.partial(transformer.decode_step, cfg=cfg, fcfg=fcfg))
         self._clear = jax.jit(functools.partial(
             transformer.clear_slot, cfg=cfg, paged=self.paged))
-        # recurrent state cannot absorb junk pad tokens -> exact-length prefill
+        self._sample = jax.jit(sampling.sample_tokens)
+        # recurrent state cannot absorb junk pad tokens -> the monolithic
+        # path prefills those archs at exact length (chunked masks pads)
         self.bucketed = all(k in (ATTN, LOCAL_ATTN) for k in cfg.pattern_unit)
 
     # -- compiled helpers ---------------------------------------------------
     def _prefill_fn(self, length: int):
+        """Monolithic path: one executable per padded prompt length."""
         if length not in self._prefill_exec:
             def fn(params, tokens, caches, slot, page_ids):
                 one = transformer.make_caches(self.cfg, 1, self.max_seq,
@@ -122,7 +162,25 @@ class ServingEngine:
 
     @property
     def prefill_compilations(self) -> int:
+        """Compiled prefill executables: O(1) chunked, O(buckets|lengths)
+        monolithic."""
+        if self.chunked:
+            return _jit_cache_size(self._prefill_chunk_exec)
         return len(self._prefill_exec)
+
+    @property
+    def compilations(self) -> dict:
+        """Executable census (the ≤-3 acceptance check lives on this)."""
+        return {
+            "prefill": self.prefill_compilations,
+            "decode": _jit_cache_size(self._decode),
+            "clear": _jit_cache_size(self._clear),
+        }
+
+    @property
+    def slot_req(self) -> list:
+        """Requests by slot (None = free) — scheduler state, read-only."""
+        return [None if s.state == FREE else s.req for s in self.sched.slots]
 
     def _page_table(self):
         """Device copy of the page table, re-uploaded only when the
@@ -132,60 +190,81 @@ class ServingEngine:
             self._pt_version = self.alloc.version
         return self._pt_device
 
-    # -- API ------------------------------------------------------------------
+    # -- admission ------------------------------------------------------------
     def add_request(self, req: Request) -> int:
-        """Admit a request into a free slot.  Paged mode reserves the
-        prompt's pages first; on :class:`PagePoolExhausted` the engine state
-        is untouched (clean admission control — callers may retry after
-        other sequences retire).
+        """Admit a request into a free slot.  Paged mode reserves the full
+        sequence's prompt pages first; on :class:`PagePoolExhausted` the
+        engine state is untouched (clean admission control).
 
-        A preempted request (non-empty ``req.out``) resumes here: its full
-        prefix (prompt + generated-so-far) is re-prefilled and greedy decode
-        continues token-identically from where it stopped.
+        Chunked mode does **no prefill here** — the scheduler doles the
+        prompt out as budget-sized chunks inside :meth:`step`, interleaved
+        with everyone else's decode.  Monolithic mode prefills the whole
+        prompt now (legacy comparison path).  A preempted request
+        (non-empty ``req.out``) resumes identically either way: its full
+        prefix (prompt + generated-so-far) is re-prefilled and decode
+        continues token-identically.
         """
-        slot = self.slot_req.index(None)
+        slot = self.sched.free_slot()
+        assert slot is not None, "no free slot"
         seq = list(req.tokens) + list(req.out)
         n = len(seq)
         assert 1 <= n <= self.max_seq
         if self.paged:
             self.alloc.grow(slot, n)  # raises PagePoolExhausted if oversize
-        page_ids = (jnp.asarray(self.alloc.page_table[slot]) if self.paged
-                    else jnp.zeros((0,), jnp.int32))
-        # prefill the first n-1 tokens; the n-th is decoded (writing its
-        # cache entry / recurrent-state update exactly once).
-        if n > 1:
+        state = self.sched.bind(slot, req, n)
+        self._slot_seq[slot] = seq
+        if req.t_submit is None:
+            req.t_submit = time.monotonic()
+        if not self.chunked and state == PREFILL:
             m = n - 1
             plen = min(next_pow2(m), self.max_seq) if self.bucketed else m
             toks = np.zeros((1, plen), np.int32)
             toks[0, :m] = seq[:m]
+            page_ids = (jnp.asarray(self.alloc.page_table[slot]) if self.paged
+                        else jnp.zeros((0,), jnp.int32))
             fn = self._prefill_fn(plen)
             self.caches = fn(self.params, jnp.asarray(toks), self.caches,
                              jnp.int32(slot), page_ids)
-        else:  # nothing to prefill: clear any stale state in the slot
+            self.sched.mark_prefilled(slot)
+            state = DECODE
+        if state == DECODE and self.sched.slots[slot].target == 0:
+            # nothing to prefill: clear any stale per-slot state
             self.caches = self._clear(self.caches, jnp.int32(slot))
-        self.slot_req[slot] = req
-        self._slot_admit[slot] = self._admit_counter
-        self._admit_counter += 1
-        # generation restarts at the last prompt token: it is re-decoded so
-        # its K/V (or recurrent-state) entry is written at position n-1.
-        self.cache_len = self.cache_len.at[slot].set(n - 1)
-        self.last_token = self.last_token.at[slot].set(seq[-1])
+        if state == DECODE:
+            # generation restarts at the last prompt token: it is re-decoded
+            # so its K/V (or recurrent-state) entry lands at position n-1.
+            self.cache_len = self.cache_len.at[slot].set(n - 1)
+            self.last_token = self.last_token.at[slot].set(seq[-1])
+        else:
+            self.cache_len = self.cache_len.at[slot].set(0)
         return slot
 
+    # -- preemption / page growth ---------------------------------------------
     def _preempt(self, slot: int) -> None:
         """Evict a running sequence: free its pages and queue it for
-        re-admission (its generated tokens stay on the request, so resuming
-        is just a longer prefill — no state is copied or swapped out)."""
-        req = self.slot_req[slot]
-        self.slot_req[slot] = None
+        re-admission ahead of fresh requests.  Generated tokens stay on the
+        request; resuming is just a longer (chunked) prefill — no state is
+        copied or swapped out.  Mid-prefill victims simply restart their
+        prefill."""
+        req = self.sched.preempt(slot)
         self.cache_len = self.cache_len.at[slot].set(0)
+        self._slot_seq[slot] = None
         self.alloc.free(slot)
-        self._preempted.append(req)
+        self.sched.enqueue(req, front=True)
+
+    def _fail_slot(self, slot: int, err: str) -> None:
+        req = self.sched.release(slot)
+        req.error, req.done = err, True
+        req.t_done = time.monotonic()
+        self.cache_len = self.cache_len.at[slot].set(0)
+        self._slot_seq[slot] = None
+        self.alloc.free(slot)
+        self._failed.append(req)
 
     def _grow_active(self, active: list) -> list:
-        """Reserve the next token's page for every active slot, preempting
-        youngest-first when the pool is out of pages.  A lone sequence that
-        cannot grow is failed (req.error) rather than crashing the engine."""
+        """Reserve the next token's page for every decoding slot, preempting
+        youngest-first (decoding *or* prefilling) when the pool runs dry.
+        A lone sequence that cannot grow is failed rather than crashing."""
         lens = np.asarray(self.cache_len)
         for i in list(active):
             if i not in active:
@@ -195,63 +274,103 @@ class ServingEngine:
                     self.alloc.grow(i, int(lens[i]) + 1)
                     break
                 except PagePoolExhausted as e:
-                    victim = max(active, key=lambda j: self._slot_admit[j])
-                    if victim == i and len(active) == 1:
+                    victim = self.sched.preempt_victim()
+                    if victim == i and len(self.sched.occupied()) == 1:
                         # nothing left to preempt: the pool can never back
                         # this sequence — fail it cleanly
-                        req = self.slot_req[i]
-                        req.error = str(e)
-                        req.done = True
-                        self.slot_req[i] = None
-                        self.cache_len = self.cache_len.at[i].set(0)
-                        self.alloc.free(i)
+                        self._fail_slot(i, str(e))
                         active.remove(i)
-                        self._failed.append(req)
                         break
                     self._preempt(victim)
-                    active.remove(victim)
+                    if victim in active:
+                        active.remove(victim)
                     if victim == i:
                         break
         return active
 
+    # -- the step -------------------------------------------------------------
     def step(self):
-        """One batched decode step across all active slots.  Returns the
-        requests that finished (or, paged mode, failed) this step."""
+        """Execute one scheduler plan: budgeted prefill chunks, then one
+        batched decode across the decoding slots.  Returns the requests
+        that finished (or, paged mode, failed) this step."""
         finished = []
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        plan = self.sched.plan()
+        # --- prefill chunks (fixed shape; one executable) -------------------
+        if plan.chunks:
+            pt = self._page_table() if self.paged else None
+            for ch in plan.chunks:
+                seq = self._slot_seq[ch.slot]
+                toks = np.zeros((1, self.chunk), np.int32)
+                toks[0, :ch.n] = seq[ch.start:ch.start + ch.n]
+                kw = {"page_table": pt} if self.paged else {}
+                self.caches = self._prefill_chunk_exec(
+                    self.params, jnp.asarray(toks), self.caches,
+                    jnp.int32(ch.slot), jnp.int32(ch.start), jnp.int32(ch.n),
+                    **kw)
+                self.cache_len = self.cache_len.at[ch.slot].set(
+                    ch.start + ch.n)
+                if self.sched.on_chunk(ch.slot, ch.n):
+                    # prefill complete: decode restarts at the last token,
+                    # whose K/V entry is then written exactly once at n-1
+                    self.last_token = self.last_token.at[ch.slot].set(
+                        seq[-1])
+        # --- decode ----------------------------------------------------------
+        active = list(plan.decode_slots)
         if self.paged and active:
-            # ensure every active slot has a page for the token it is about
-            # to write (position cache_len -> page cache_len // page_size);
-            # may preempt or fail sequences when the pool is oversubscribed
             active = self._grow_active(active)
             finished.extend(self._failed)
             self._failed.clear()
         if not active:
+            self.sched.tick()
             return finished
-        if self.paged:
-            logits, self.caches = self._decode(
-                self.params, self.last_token, self.caches, self.cache_len,
-                page_table=self._page_table())
-        else:
-            logits, self.caches = self._decode(self.params, self.last_token,
-                                               self.caches, self.cache_len)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        mask = jnp.asarray([r is not None for r in self.slot_req])
-        self.cache_len = self.cache_len + mask.astype(jnp.int32)
-        self.last_token = jnp.where(mask, next_tok, self.last_token)
-        toks = np.asarray(next_tok)
+        act = np.zeros((self.n_slots,), bool)
+        act[active] = True
+        act_dev = jnp.asarray(act)
+        kw = {"page_table": self._page_table()} if self.paged else {}
+        logits, self.caches = self._decode(self.params, self.last_token,
+                                           self.caches, self.cache_len,
+                                           active=act_dev, **kw)
+        temps = np.zeros((self.n_slots,), np.float32)
+        topks = np.zeros((self.n_slots,), np.int32)
+        seeds = np.zeros((self.n_slots,), np.int32)
+        idxs = np.zeros((self.n_slots,), np.int32)
         for i in active:
-            req = self.slot_req[i]
+            r = self.sched.slots[i].req
+            temps[i] = r.temperature
+            topks[i] = r.top_k
+            seeds[i] = r.rid if r.seed is None else r.seed
+            idxs[i] = len(r.out)
+        if temps.any():
+            next_tok = self._sample(logits, jnp.asarray(temps),
+                                    jnp.asarray(topks), jnp.asarray(seeds),
+                                    jnp.asarray(idxs))
+        else:  # all-greedy step (the default): skip the sampler's
+            # full-vocab sort + Gumbel draw on the hot path
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.cache_len = self.cache_len + act_dev.astype(jnp.int32)
+        self.last_token = jnp.where(act_dev, next_tok, self.last_token)
+        toks = np.asarray(next_tok)
+        now = time.monotonic()
+        for i in active:
+            req = self.sched.slots[i].req
             req.out.append(int(toks[i]))
-            if len(req.out) >= req.max_new or int(self.cache_len[i]) >= self.max_seq - 1:
+            if req.t_first is None:
+                req.t_first = now
+            self.sched.on_decode_token(i)
+            if (len(req.out) >= req.max_new
+                    or int(self.cache_len[i]) >= self.max_seq - 1):
                 req.done = True
+                req.t_done = now
                 finished.append(req)
-                self.slot_req[i] = None
+                self.sched.release(i)
+                self._slot_seq[i] = None
                 self.cache_len = self.cache_len.at[i].set(0)
                 if self.paged:
                     self.alloc.free(i)  # pages return to the pool
+        self.sched.tick()
         return finished
 
+    # -- admission control ----------------------------------------------------
     def _admissible(self, req: Request) -> bool:
         """Paged admission control: admit only if the sequence's pages are
         free right now (retiring sequences release pages continuously, so
@@ -272,34 +391,38 @@ class ServingEngine:
                 f"has {self.pcfg.n_pages - 1} allocatable")
         return self.alloc.can_admit(n)
 
+    # -- the loop -------------------------------------------------------------
     def run(self, requests: list[Request], max_steps: int = 1000):
         """Serve ``requests`` to completion.  Preempted sequences re-enter
         ahead of fresh ones; requests the pool can never back come back with
         ``req.error`` set instead of crashing the loop."""
-        pending = list(requests)
+        now = time.monotonic()
+        for req in requests:
+            if req.t_submit is None:
+                req.t_submit = now
+            self.sched.enqueue(req)
         done = []
         steps = 0
-        while (pending or self._preempted
-               or any(r is not None for r in self.slot_req)) \
+        while (self.sched.has_queued or self.sched.busy) \
                 and steps < max_steps:
-            while (self._preempted or pending) and None in self.slot_req:
-                queue = self._preempted if self._preempted else pending
+            while self.sched.has_queued and self.sched.free_slot() is not None:
                 try:
-                    if not self._admissible(queue[0]):
+                    if not self._admissible(self.sched.next_queued()):
                         break
                 except PagePoolExhausted as e:
-                    req = queue.pop(0)
+                    req = self.sched.pop_queued()
                     req.error, req.done = str(e), True
+                    req.t_done = time.monotonic()
                     done.append(req)
                     continue
-                self.add_request(queue.pop(0))
+                self.add_request(self.sched.pop_queued())
             done.extend(self.step())
             steps += 1
         # max_steps exhausted with work still queued: surface evicted
         # requests rather than letting them vanish (partial req.out kept)
-        for req in self._preempted:
+        for req in self.sched.resume:
             req.error = req.error or (
                 f"preempted and not resumed within max_steps={max_steps}")
             done.append(req)
-        self._preempted = []
+        self.sched.resume = []
         return done

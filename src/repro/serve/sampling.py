@@ -1,0 +1,41 @@
+"""Batched per-request token sampling for the serving engine.
+
+One jitted executable samples every slot of the decode batch at once;
+everything request-specific — temperature, top-k, seed, position — arrives
+as plain per-slot operands, so the executable never recompiles when the
+request mix changes (the same "reprogram, never re-synthesise" contract as
+the decode step itself).
+
+Reproducibility: the PRNG key for a slot is
+``fold_in(PRNGKey(seed), token_index)`` — a pure function of the
+*request's* seed and how many tokens it has generated, independent of
+which slot it landed in, what else is in the batch, or preemption/resume
+history.  A seeded request therefore samples the same tokens in any
+engine configuration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, temperature, top_k, seed, index):
+    """Sample one token per slot.
+
+    logits: (B, vocab) f32; temperature: (B,) f32 — ``<= 0`` means greedy
+    (argmax, the default); top_k: (B,) int32 — ``0`` disables the top-k
+    filter; seed: (B,) int32 per-request PRNG seed; index: (B,) int32
+    per-request token index (``len(req.out)``).  Returns (B,) int32.
+    """
+    def one(lg, t, k, s, idx):
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+        v = lg.shape[-1]
+        # top-k: keep logits >= the k-th largest (k == 0 -> keep all)
+        kth = jnp.sort(lg)[::-1][jnp.clip(k, 1, v) - 1]
+        masked = jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+        key = jax.random.fold_in(jax.random.PRNGKey(s), idx)
+        g = jax.random.gumbel(key, lg.shape, lg.dtype)
+        sampled = jnp.argmax(masked / jnp.maximum(t, 1e-6) + g)
+        return jnp.where(t > 0, sampled.astype(jnp.int32), greedy)
+
+    return jax.vmap(one)(logits, temperature, top_k, seed, index)

@@ -78,6 +78,46 @@ def test_paged_kernel_matches_gather_reference():
     np.testing.assert_allclose(out, want, atol=1e-5)
 
 
+def test_chunk_prefill_kernel_matches_reference():
+    """Contiguous chunked-prefill kernel vs the dense oracle, across
+    offsets (first / middle / last chunk of a prompt)."""
+    B, C, H, KV, dh = 2, 8, 4, 2, 16
+    Skv = 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, C, H, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Skv, KV, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Skv, KV, dh), jnp.float32)
+    from repro.kernels.decode import ops as dec_ops
+    for off in (0, 8, 24):
+        out = dec_ops.chunk_prefill_attention(q, kc, vc, jnp.int32(off),
+                                              block_k=16, interpret=True)
+        want = dec_ref.chunk_prefill_reference(q, kc, vc, jnp.int32(off))
+        np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+def test_paged_chunk_prefill_kernel_matches_reference():
+    """Scalar-prefetched page-table chunked-prefill kernel vs the
+    gather-based oracle."""
+    B, C, H, KV, dh = 2, 8, 4, 2, 16
+    ps, n_p = 8, 8
+    n_pages = 1 + B * n_p
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, C, H, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, ps, KV, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, ps, KV, dh), jnp.float32)
+    rng = np.random.default_rng(4)
+    pt = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages)).reshape(B, n_p), jnp.int32)
+    from repro.kernels.decode import ops as dec_ops
+    for off in (0, 8, 21):
+        out = dec_ops.paged_chunk_prefill_attention(q, kp, vp, pt,
+                                                    jnp.int32(off),
+                                                    interpret=True)
+        want = dec_ref.paged_chunk_prefill_reference(q, kp, vp, pt,
+                                                     jnp.int32(off))
+        np.testing.assert_allclose(out, want, atol=1e-5)
+
+
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
 def test_paged_matches_contiguous_decode(impl):
     """Scattering a contiguous cache into pages and reading it back through

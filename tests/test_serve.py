@@ -1,6 +1,8 @@
 """Serving-engine integration: continuous batching produces exactly the
-tokens a sequential prefill+decode loop would, for both bucketed (attention)
-and exact-length (recurrent) prefill strategies."""
+tokens a sequential prefill+decode loop would, chunked prefill is
+token-identical to the monolithic baseline (contiguous + paged, xla +
+pallas, attention/hybrid/recurrent archs), long prompts prefill across
+many chunks, and per-request sampling is reproducible."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -38,6 +40,16 @@ def _greedy_reference(params, cfg, tokens, max_new):
     return out
 
 
+def _serve(params, cfg, prompts, max_new, **kw):
+    engine = ServingEngine(params, cfg, kw.pop("fcfg", FCFG), **kw)
+    reqs = [Request(rid=i, tokens=list(p), max_new=max_new)
+            for i, p in enumerate(prompts)]
+    done = sorted(engine.run(reqs), key=lambda r: r.rid)
+    assert len(done) == len(prompts)
+    assert all(r.error is None for r in done)
+    return [r.out for r in done], engine
+
+
 @pytest.mark.parametrize("arch", ["qwen2-7b", "recurrentgemma-2b",
                                   "rwkv6-1.6b"])
 def test_engine_matches_sequential_reference(arch):
@@ -54,9 +66,82 @@ def test_engine_matches_sequential_reference(arch):
         assert req.out == ref, (arch, req.rid, req.out, ref)
 
 
-def test_bucketing_reuses_executables():
+# ---------------------------------------------------------------------------
+# chunked vs monolithic prefill parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "recurrentgemma-2b",
+                                  "rwkv6-1.6b"])
+def test_chunked_matches_monolithic(arch):
+    """Token-identical output whether the prompt is prefilled in one
+    monolithic call or in fixed-shape chunks between decode steps —
+    global-attention, hybrid recurrent/local-attention and pure-recurrent
+    stacks, with prompts spanning partial, exact and multi-chunk lengths."""
+    cfg = shrink(get_config(arch))
+    params = _params(cfg)
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (3, 9, 17, 33, 1)]
+    mono, _ = _serve(params, cfg, prompts, 5, n_slots=2, max_seq=64,
+                     prefill_mode="monolithic")
+    chunked, engine = _serve(params, cfg, prompts, 5, n_slots=2, max_seq=64,
+                             prefill_mode="chunked", chunk=8)
+    assert mono == chunked, arch
+    assert engine.prefill_compilations == 1
+
+
+def test_chunked_matches_monolithic_paged():
     cfg = shrink(get_config("qwen2-7b"))
-    engine = ServingEngine(_params(cfg), cfg, FCFG, n_slots=4, max_seq=64)
+    params = _params(cfg)
+    rng = np.random.default_rng(2)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (5, 21, 12)]
+    mono, _ = _serve(params, cfg, prompts, 4, n_slots=2, max_seq=64,
+                     prefill_mode="monolithic", cache_kind="paged",
+                     page_size=8)
+    chunked, _ = _serve(params, cfg, prompts, 4, n_slots=2, max_seq=64,
+                        prefill_mode="chunked", chunk=16, cache_kind="paged",
+                        page_size=8)
+    assert mono == chunked
+
+
+def test_chunked_pallas_matches_xla():
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n)) for n in (6, 19)]
+    xla, _ = _serve(params, cfg, prompts, 4, n_slots=2, max_seq=32, chunk=8)
+    pallas, _ = _serve(params, cfg, prompts, 4, n_slots=2, max_seq=32,
+                       chunk=8, fcfg=FamousConfig(impl="pallas"))
+    assert xla == pallas
+
+
+def test_long_prompt_spans_many_chunks():
+    """A prompt far beyond any single prefill call (> the old engine's
+    largest sub-max_seq pow-2 bucket) prefills as a sequence of fixed
+    chunks and still matches the monolithic oracle token for token."""
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(4)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=100))]
+    mono, _ = _serve(params, cfg, prompts, 4, n_slots=2, max_seq=128,
+                     prefill_mode="monolithic")
+    chunked, engine = _serve(params, cfg, prompts, 4, n_slots=2, max_seq=128,
+                             prefill_mode="chunked", chunk=16)
+    assert mono == chunked
+    assert engine.prefill_compilations == 1  # 7 chunk calls, one executable
+
+
+# ---------------------------------------------------------------------------
+# legacy monolithic path (kept as the comparison baseline)
+# ---------------------------------------------------------------------------
+
+
+def test_monolithic_bucketing_reuses_executables():
+    cfg = shrink(get_config("qwen2-7b"))
+    engine = ServingEngine(_params(cfg), cfg, FCFG, n_slots=4, max_seq=64,
+                           prefill_mode="monolithic")
     assert engine.bucketed
     rng = np.random.default_rng(1)
     lens = [3, 5, 7, 9, 12, 15, 17, 30]  # -> buckets {2,4,8,16,32}
@@ -67,7 +152,66 @@ def test_bucketing_reuses_executables():
     assert engine.prefill_compilations <= 5  # pow-2 buckets, not per-length
 
 
-def test_recurrent_engine_uses_exact_length():
+def test_monolithic_recurrent_uses_exact_length():
     cfg = shrink(get_config("rwkv6-1.6b"))
-    engine = ServingEngine(_params(cfg), cfg, FCFG, n_slots=2, max_seq=64)
+    engine = ServingEngine(_params(cfg), cfg, FCFG, n_slots=2, max_seq=64,
+                           prefill_mode="monolithic")
     assert not engine.bucketed
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_default_unchanged():
+    """temperature=0 (the default) is plain argmax — identical to the
+    sequential greedy reference."""
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    prompt = list(rng.integers(0, cfg.vocab_size, size=9))
+    ref = _greedy_reference(params, cfg, prompt, 5)
+    engine = ServingEngine(params, cfg, FCFG, n_slots=2, max_seq=128)
+    done = engine.run([Request(rid=0, tokens=prompt, max_new=5)])
+    assert done[0].out == ref
+
+
+def test_seeded_sampling_reproducible():
+    """A seeded request samples the same tokens regardless of batch
+    composition or slot placement (key = f(seed, token index) only)."""
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(6)
+    prompt = list(rng.integers(0, cfg.vocab_size, size=9))
+
+    def run(extra_prompts, n_slots):
+        reqs = [Request(rid=0, tokens=list(prompt), max_new=6,
+                        temperature=0.8, top_k=5, seed=42)]
+        reqs += [Request(rid=i + 1, tokens=list(p), max_new=6)
+                 for i, p in enumerate(extra_prompts)]
+        engine = ServingEngine(params, cfg, FCFG, n_slots=n_slots, max_seq=64,
+                               chunk=8)
+        done = sorted(engine.run(reqs), key=lambda r: r.rid)
+        return done[0].out
+
+    alone = run([], 2)
+    extras = [list(rng.integers(0, cfg.vocab_size, size=7)) for _ in range(3)]
+    crowded = run(extras, 3)
+    assert alone == crowded
+    # unseeded (seed=None) requests fall back to their rid: two sampling
+    # requests with the same prompt draw different noise, not N copies
+    engine = ServingEngine(params, cfg, FCFG, n_slots=2, max_seq=64)
+    pair = engine.run([Request(rid=i, tokens=list(prompt), max_new=8,
+                               temperature=2.0) for i in (0, 1)])
+    pair = sorted(pair, key=lambda r: r.rid)
+    assert pair[0].out != pair[1].out
+    # and a seeded run is actually sampling (top_k > 1, warm temperature):
+    # it may coincide with greedy on some steps but the machinery is live —
+    # top_k=1 must collapse back to greedy exactly.
+    greedy = ServingEngine(params, cfg, FCFG, n_slots=2, max_seq=64).run(
+        [Request(rid=0, tokens=list(prompt), max_new=6)])[0].out
+    k1 = ServingEngine(params, cfg, FCFG, n_slots=2, max_seq=64).run(
+        [Request(rid=0, tokens=list(prompt), max_new=6, temperature=0.7,
+                 top_k=1, seed=9)])[0].out
+    assert k1 == greedy
