@@ -1,17 +1,26 @@
 """Serving-level microbench: monolithic vs chunked prefill under a mixed
-long/short workload, contiguous vs paged KV cache.
+long/short workload, contiguous vs paged KV cache, and cold-vs-warm
+prefix caching under a repeated-prefix workload.
 
 Beyond raw tokens/s, each row reports request-level latency percentiles —
 the numbers the Scheduler/Runtime split actually moves:
 
   * **TTFT** (time to first token, p50/p95): monolithic prefill stalls
     every decode slot while a long prompt prefills head-of-line; chunked
-    prefill bounds the stall to one budget-sized chunk per step.
+    prefill bounds the stall to one budget-sized chunk per step; a warm
+    prefix cache skips the shared head's chunks entirely.
   * **TPOT** (time per output token after the first, p50/p95): how steady
     decode remains while prompts are being prefilled in between.
 
+The ``prefix_cold`` / ``prefix_warm`` rows serve the same shared-system-
+prompt workload twice through one prefix-cached engine; the warm row also
+reports ``pages_saved`` (pages aliased instead of allocated+prefilled) and
+asserts warm outputs are token-identical to cold with executables still
+O(1) — the acceptance gate for the prefix cache.
+
 Set ``SERVING_BENCH_TINY=1`` for the CI smoke configuration (small model,
-few requests) — scripts/ci.sh runs it so scheduler regressions fail CI.
+few requests) — scripts/ci.sh runs it so scheduler and prefix-cache
+regressions fail CI.
 """
 from __future__ import annotations
 
@@ -50,6 +59,19 @@ def _requests(cfg, n=N_REQ, seed=0):
             for i, n_ in enumerate(lens)]
 
 
+def _prefix_requests(cfg, n=N_REQ, seed=7, rid0=0):
+    """The prefix-cache workload: every prompt = one shared 'system prompt'
+    (3/4 of usable context) + a short distinct tail."""
+    rng = np.random.default_rng(seed)
+    head = (MAX_SEQ - MAX_NEW - 8) * 3 // 4
+    shared = list(rng.integers(0, cfg.vocab_size, size=head))
+    return [Request(rid=rid0 + i,
+                    tokens=shared + list(rng.integers(0, cfg.vocab_size,
+                                                      size=rng.integers(2, 8))),
+                    max_new=MAX_NEW)
+            for i in range(n)]
+
+
 def _cache_bytes(engine) -> int:
     return sum(b.size * b.dtype.itemsize
                for b in jax.tree_util.tree_leaves(engine.caches))
@@ -59,16 +81,7 @@ def _pct(xs, q):
     return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
 
 
-def _bench(params, cfg, label, **kw):
-    engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
-                           n_slots=N_SLOTS, max_seq=MAX_SEQ, **kw)
-    # warm THIS engine's executables (jit caches are per-instance) with the
-    # same length mix as the timed run, so the timed region measures
-    # scheduling, not XLA compiles — monolithic mode compiles its whole
-    # bucket family here, chunked its two executables (the executable
-    # counts in the emitted row keep that asymmetry visible)
-    engine.run(_requests(cfg))
-    reqs = _requests(cfg)
+def _timed_run(engine, reqs, label):
     t0 = time.monotonic()
     done = engine.run(reqs)
     dt = time.monotonic() - t0
@@ -85,13 +98,61 @@ def _bench(params, cfg, label, **kw):
         f"tpot_p50_ms={_pct(tpot, 50):.1f};tpot_p95_ms={_pct(tpot, 95):.1f};"
         f"prefill_execs={engine.prefill_compilations};"
         f"cache_mib={_cache_bytes(engine)/2**20:.2f}")
+    return done, ttft
+
+
+def _bench(params, cfg, label, **kw):
+    engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                           n_slots=N_SLOTS, max_seq=MAX_SEQ, **kw)
+    # warm THIS engine's executables (jit caches are per-instance) with the
+    # same length mix as the timed run, so the timed region measures
+    # scheduling, not XLA compiles — monolithic mode compiles its whole
+    # bucket family here, chunked its two executables (the executable
+    # counts in the emitted row keep that asymmetry visible)
+    engine.run(_requests(cfg))
+    _timed_run(engine, _requests(cfg), label)
     return engine
+
+
+def _bench_prefix(params, cfg):
+    """Cold vs warm rows through ONE prefix-cached engine: run 1 publishes
+    the shared head's blocks, run 2 aliases them.  Asserts the acceptance
+    gate: warm token-identical to cold, pages saved, executables O(1)."""
+    engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                           n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                           prefill_mode="chunked", chunk=CHUNK,
+                           cache_kind="paged", page_size=PAGE,
+                           prefix_cache=True)
+    # executable warmup with an unrelated prompt mix (different seed, so no
+    # hash collisions with the timed workload: the cold row stays cold)
+    engine.run(_requests(cfg, seed=99))
+    hit0 = engine.prefix_hit_pages
+    cold, cold_ttft = _timed_run(engine, _prefix_requests(cfg), "prefix_cold")
+    hit1 = engine.prefix_hit_pages   # late cold admissions may already hit
+    warm, warm_ttft = _timed_run(engine, _prefix_requests(cfg, rid0=N_REQ),
+                                 "prefix_warm")
+    saved = engine.prefix_hit_pages - hit1
+    common.emit("serving/prefix_warm_vs_cold",
+                _pct(warm_ttft, 50) * 1e3,  # us, for the us-valued column
+                f"ttft_p50_cold_ms={_pct(cold_ttft, 50):.1f};"
+                f"ttft_p50_warm_ms={_pct(warm_ttft, 50):.1f};"
+                f"pages_saved_cold={hit1 - hit0};pages_saved_warm={saved};"
+                f"cached_free_pages={engine.alloc.cached_free_pages}")
+    outs = [r.out for r in sorted(cold, key=lambda r: r.rid)]
+    wout = [r.out for r in sorted(warm, key=lambda r: r.rid)]
+    assert outs == wout, "warm prefix-cache outputs must be token-identical"
+    assert saved > 0, "warm run must alias cached pages"
+    census = engine.compilations
+    assert sum(census.values()) <= 3, census  # CI tripwire
+    assert _pct(warm_ttft, 50) < _pct(cold_ttft, 50), \
+        (f"warm TTFT p50 {_pct(warm_ttft, 50):.1f}ms not below cold "
+         f"{_pct(cold_ttft, 50):.1f}ms")
 
 
 def run():
     print("# serving-level: continuous batching under a mixed long/short "
           "workload (CPU) — monolithic vs chunked prefill, contiguous vs "
-          "paged KV cache; TTFT/TPOT in ms")
+          "paged KV cache, cold vs warm prefix cache; TTFT/TPOT in ms")
     cfg = shrink(get_config("qwen2-7b"))
     params = module.init_params(transformer.model_spec(cfg),
                                 jax.random.PRNGKey(0), jnp.float32)
@@ -100,6 +161,7 @@ def run():
     assert eng.prefill_compilations == 1, eng.compilations  # CI tripwire
     _bench(params, cfg, "chunked_paged", prefill_mode="chunked", chunk=CHUNK,
            cache_kind="paged", page_size=PAGE)
+    _bench_prefix(params, cfg)
     if not TINY:
         half = max(2, PagedCacheConfig.default_pool(N_SLOTS, MAX_SEQ,
                                                     PAGE) // 2)

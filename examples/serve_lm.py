@@ -1,8 +1,8 @@
 """Serving driver: batched requests through the Scheduler/Runtime engine
 (token-budgeted chunked prefill interleaved with batched decode) on a
-reduced qwen2-style model — once monolithic, once chunked, and once
-chunked+paged — checking the generated tokens are identical every way
-(docs/serving.md).
+reduced qwen2-style model — once monolithic, once chunked, once
+chunked+paged, and once with the prefix cache (cold then warm) — checking
+the generated tokens are identical every way (docs/serving.md).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -18,9 +18,9 @@ from repro.models import module, transformer
 from repro.serve.engine import Request, ServingEngine
 
 
-def serve(params, cfg, reqs, label, **kw):
-    engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
-                           n_slots=4, max_seq=256, **kw)
+def serve(params, cfg, reqs, label, engine=None, **kw):
+    engine = engine or ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                                     n_slots=4, max_seq=256, **kw)
     t0 = time.monotonic()
     done = sorted(engine.run(reqs), key=lambda r: r.rid)
     dt = time.monotonic() - t0
@@ -28,7 +28,7 @@ def serve(params, cfg, reqs, label, **kw):
     print(f"{label:22s}: {len(done)} requests, {tok} new tokens, "
           f"{dt:.2f}s ({tok/dt:.1f} tok/s on 1 CPU core), "
           f"prefill executables: {engine.prefill_compilations}")
-    return done
+    return done, engine
 
 
 def main():
@@ -44,16 +44,28 @@ def main():
         return [Request(rid=i, tokens=list(p), max_new=16)
                 for i, p in enumerate(prompts)]
 
-    mono = serve(params, cfg, reqs(), "monolithic",
-                 prefill_mode="monolithic")
-    chunked = serve(params, cfg, reqs(), "chunked")
-    paged = serve(params, cfg, reqs(), "chunked + paged",
-                  cache_kind="paged", page_size=16)
+    mono, _ = serve(params, cfg, reqs(), "monolithic",
+                    prefill_mode="monolithic")
+    chunked, _ = serve(params, cfg, reqs(), "chunked")
+    paged, _ = serve(params, cfg, reqs(), "chunked + paged",
+                     cache_kind="paged", page_size=16)
+    # prefix cache: the first pass publishes every prompt's full blocks on
+    # retirement; the second pass (same prompts, same engine) aliases them
+    # and skips the cached prefill outright — still token-identical.
+    cold, eng = serve(params, cfg, reqs(), "prefix cache (cold)",
+                      cache_kind="paged", page_size=16, prefix_cache=True)
+    warm, _ = serve(params, cfg, reqs(), "prefix cache (warm)", engine=eng)
     assert [r.out for r in mono] == [r.out for r in chunked], \
         "chunked prefill must be token-identical"
     assert [r.out for r in mono] == [r.out for r in paged], \
         "paged cache must be token-identical"
-    print("monolithic == chunked == chunked+paged, token for token")
+    assert [r.out for r in mono] == [r.out for r in cold] \
+        == [r.out for r in warm], "prefix cache must be token-identical"
+    assert eng.prefix_hit_pages > 0, "warm pass must alias cached pages"
+    print("monolithic == chunked == chunked+paged == prefix-cached "
+          "(cold & warm), token for token")
+    print(f"  warm pass reused {eng.prefix_hit_pages} pages / "
+          f"{eng.prefix_hit_tokens} prompt tokens from the prefix cache")
     for r in mono[:4]:
         print(f"  req {r.rid:2d} | prompt len {len(r.tokens):3d} -> {r.out}")
 

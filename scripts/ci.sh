@@ -32,7 +32,9 @@ echo "doc links ok"
 echo "== examples/quickstart.py smoke =="
 python examples/quickstart.py
 
-# --- serving bench smoke: scheduler/chunked-prefill regressions fail here --
+# --- serving bench smoke: scheduler / chunked-prefill / prefix-cache
+# regressions fail here (the prefix rows assert warm==cold token parity,
+# pages actually saved, and the O(1)-executable census) ---------------------
 echo "== benchmarks/serving_bench.py smoke (tiny config) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" SERVING_BENCH_TINY=1 \
   python benchmarks/serving_bench.py

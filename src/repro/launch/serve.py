@@ -56,6 +56,11 @@ def main():
                     help="pool pages incl. the null page (paged mode); "
                          "0 = full contiguous-equivalent capacity — pass "
                          "less to oversubscribe")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical full prompt blocks across "
+                         "requests via refcounted pages (paged + chunked "
+                         "only; recurrent/hybrid archs fall back to cold "
+                         "prefill)")
     args = ap.parse_args()
 
     cfg = shrink(get_config(args.arch))
@@ -70,11 +75,17 @@ def main():
                            n_pages=args.n_pages or None,
                            prefill_mode=args.prefill_mode,
                            chunk=args.chunk,
-                           token_budget=args.token_budget)
+                           token_budget=args.token_budget,
+                           prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(args.seed)
+    # --prefix-cache demo: every request shares a "system prompt" head, the
+    # workload prefix caching exists for (otherwise prompts are disjoint)
+    shared = (list(rng.integers(0, cfg.vocab_size, size=args.max_seq // 4))
+              if args.prefix_cache else [])
+    tail_hi = max(5, min(32, args.max_seq - len(shared) - args.max_new))
     reqs = [Request(rid=i,
-                    tokens=list(rng.integers(0, cfg.vocab_size,
-                                             size=rng.integers(4, 32))),
+                    tokens=shared + list(rng.integers(0, cfg.vocab_size,
+                                                      size=rng.integers(4, tail_hi))),
                     max_new=args.max_new,
                     temperature=args.temperature, top_k=args.top_k,
                     seed=args.seed + i)
@@ -92,6 +103,11 @@ def main():
         print(f"page pool: {engine.pcfg.n_pages} pages x "
               f"{engine.pcfg.page_size} tokens, "
               f"{engine.alloc.free_pages} free after drain")
+    if args.prefix_cache:
+        print(f"prefix cache: active={engine.prefix_cache_active}, "
+              f"{engine.prefix_hit_pages} pages / "
+              f"{engine.prefix_hit_tokens} tokens reused, "
+              f"{engine.alloc.cached_free_pages} pages warm on the LRU")
     for r in done[:3]:
         f = engine.sched.fairness(r.rid)
         ttft = (r.t_first - r.t_submit) * 1e3 if r.t_first else float("nan")

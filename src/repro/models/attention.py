@@ -245,9 +245,11 @@ def apply_attn_decode_paged(p: dict, x: jax.Array, cache: dict, page_table,
     x: (B, 1, D); cache: {"k","v"} pools (n_pages, page_size, kv, dh);
     page_table: (B, pages_per_slot) int32; cache_len: (B,) valid entries
     BEFORE this token.  The new token's K/V scatter into page
-    ``page_table[b, len // page_size]`` at offset ``len % page_size``
-    (distinct slots hold distinct pages, so the batched scatter never
-    collides; inactive slots write the null page).  Returns (out, cache).
+    ``page_table[b, len // page_size]`` at offset ``len % page_size``.
+    Slots may *alias* read-only prefix pages (prefix cache), but every
+    write position lies past the slot's shared prefix in a private page,
+    so the batched scatter never collides on a non-null page; inactive
+    slots write the null page.  Returns (out, cache).
     """
     B = x.shape[0]
     positions = cache_len[:, None]

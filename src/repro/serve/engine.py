@@ -32,7 +32,13 @@ comparison baseline for parity tests and benchmarks.
 KV-cache layout remains a config switch (``cache_kind``): ``"contiguous"``
 per-slot stripes or the ``"paged"`` shared pool with host-side
 :class:`~repro.serve.paged.PageAllocator` admission control (see
-docs/serving.md and serve/paged.py).
+docs/serving.md and serve/paged.py).  ``prefix_cache=True`` (paged +
+chunked only) additionally aliases identical full prompt blocks across
+requests through the allocator's refcounted content-hash index — admission
+maps cached blocks straight into the page table and prefill starts at the
+first uncached token; retirement publishes the request's prompt blocks
+onto the cached-free LRU.  Architectures with per-slot recurrent or ring
+state fall back to cold prefill (``prefix_cache_active`` False).
 """
 from __future__ import annotations
 
@@ -51,7 +57,7 @@ from repro.core.flexible import next_pow2
 from repro.models import transformer
 from repro.serve import sampling
 from repro.serve.paged import (PageAllocator, PagedCacheConfig,
-                               PagePoolExhausted)
+                               PagePoolExhausted, block_hashes)
 from repro.serve.scheduler import (DECODE, FREE, PREFILL, Scheduler,
                                    SchedulerConfig)
 
@@ -93,7 +99,7 @@ class ServingEngine:
                  cache_kind: str = "contiguous", page_size: int = 16,
                  n_pages: Optional[int] = None,
                  prefill_mode: str = "chunked", chunk: int = 32,
-                 token_budget: int = 0):
+                 token_budget: int = 0, prefix_cache: bool = False):
         assert cache_kind in ("contiguous", "paged"), cache_kind
         assert prefill_mode in ("chunked", "monolithic"), prefill_mode
         self.params = params
@@ -125,6 +131,24 @@ class ServingEngine:
                 page_size=page_size, n_pages=n_pages)
         else:
             self.caches = transformer.make_caches(cfg, n_slots, max_seq, dtype)
+        # -- prefix cache ---------------------------------------------------
+        # Aliasing cached prompt blocks requires (a) paged storage, (b) a
+        # chunked prefill that can start at the first uncached token, and
+        # (c) an architecture whose *entire* prefix state lives in the page
+        # pool.  Sliding-window rings and recurrent state (RG-LRU, RWKV) are
+        # per-slot and not content-addressable, so hybrid/recurrent patterns
+        # fall back to cold prefill explicitly (`prefix_cache_active` False).
+        if prefix_cache:
+            assert cache_kind == "paged", "prefix_cache requires paged cache"
+            assert prefill_mode == "chunked", \
+                "prefix_cache requires chunked prefill (runtime offsets)"
+        self.prefix_shareable = all(
+            k == ATTN for k in tuple(cfg.pattern_unit) + tuple(cfg.tail_layers))
+        self.prefix_cache_active = prefix_cache and self.prefix_shareable
+        self.prefix_lookups = 0        # admissions that probed the index
+        self.prefix_hit_pages = 0      # pages aliased instead of allocated
+        self.prefix_hit_tokens = 0     # tokens whose prefill was skipped
+        self._slot_hashes: list[Optional[list]] = [None] * n_slots
         self.cache_len = jnp.zeros((n_slots,), jnp.int32)
         self.last_token = jnp.zeros((n_slots,), jnp.int32)
         self._slot_seq: list[Optional[list]] = [None] * n_slots
@@ -139,7 +163,8 @@ class ServingEngine:
             functools.partial(transformer.decode_step, cfg=cfg, fcfg=fcfg))
         self._clear = jax.jit(functools.partial(
             transformer.clear_slot, cfg=cfg, paged=self.paged))
-        self._sample = jax.jit(sampling.sample_tokens)
+        self._sample = jax.jit(sampling.sample_tokens,
+                               static_argnames=("k_cap",))
         # recurrent state cannot absorb junk pad tokens -> the monolithic
         # path prefills those archs at exact length (chunked masks pads)
         self.bucketed = all(k in (ATTN, LOCAL_ATTN) for k in cfg.pattern_unit)
@@ -191,27 +216,65 @@ class ServingEngine:
         return self._pt_device
 
     # -- admission ------------------------------------------------------------
+    def _prefix_hashes(self, req: Request, n: int):
+        """(prompt-block hashes, lookup cap) for an admission of total
+        sequence length ``n``.  Only *full* prompt blocks are shareable, and
+        only blocks fully inside the first ``n - 1`` tokens may be aliased:
+        decode restarts at token ``n - 1`` and writes its K/V, so the page
+        holding position ``n - 1`` must always be private (the COW rule —
+        the partial last block is prefilled into a fresh page, never
+        copied).  Memoized on the request: a request deferred at the queue
+        head is probed by ``_admissible`` every step, and its prompt only
+        needs hashing once."""
+        ps = self.pcfg.page_size
+        cached = getattr(req, "_block_hashes", None)
+        if cached is None or cached[0] != ps:
+            cached = (ps, block_hashes(req.tokens, ps))
+            req._block_hashes = cached
+        hashes = cached[1]
+        return hashes, min(len(hashes), (n - 1) // ps)
+
     def add_request(self, req: Request) -> int:
         """Admit a request into a free slot.  Paged mode reserves the full
         sequence's prompt pages first; on :class:`PagePoolExhausted` the
-        engine state is untouched (clean admission control).
+        engine state is untouched (clean admission control).  With the
+        prefix cache active, every full prompt block that hits the index is
+        aliased into the slot's page table instead of allocated+prefilled —
+        the scheduler then starts chunked prefill at the first uncached
+        token (the runtime-offset chunk executable needs no new compile).
 
         Chunked mode does **no prefill here** — the scheduler doles the
         prompt out as budget-sized chunks inside :meth:`step`, interleaved
         with everyone else's decode.  Monolithic mode prefills the whole
         prompt now (legacy comparison path).  A preempted request
         (non-empty ``req.out``) resumes identically either way: its full
-        prefix (prompt + generated-so-far) is re-prefilled and decode
-        continues token-identically.
+        prefix (prompt + generated-so-far) is re-prefilled — minus any
+        cached head — and decode continues token-identically.
         """
         slot = self.sched.free_slot()
         assert slot is not None, "no free slot"
         seq = list(req.tokens) + list(req.out)
         n = len(seq)
         assert 1 <= n <= self.max_seq
+        n_cached = 0
         if self.paged:
-            self.alloc.grow(slot, n)  # raises PagePoolExhausted if oversize
-        state = self.sched.bind(slot, req, n)
+            if self.prefix_cache_active:
+                hashes, cap = self._prefix_hashes(req, n)
+                hits = self.alloc.lookup(hashes[:cap])
+                self.prefix_lookups += 1
+                if hits:
+                    self.alloc.map_prefix(slot, hits)
+                    n_cached = len(hits) * self.pcfg.page_size
+                    self.prefix_hit_pages += len(hits)
+                    self.prefix_hit_tokens += n_cached
+                self._slot_hashes[slot] = hashes
+            try:
+                self.alloc.grow(slot, n)  # PagePoolExhausted if oversize
+            except PagePoolExhausted:
+                self.alloc.free(slot)     # roll back any mapped prefix
+                self._slot_hashes[slot] = None
+                raise
+        state = self.sched.bind(slot, req, n, cached=n_cached)
         self._slot_seq[slot] = seq
         if req.t_submit is None:
             req.t_submit = time.monotonic()
@@ -232,11 +295,13 @@ class ServingEngine:
             self.caches = self._clear(self.caches, jnp.int32(slot))
         if state == DECODE:
             # generation restarts at the last prompt token: it is re-decoded
-            # so its K/V (or recurrent-state) entry lands at position n-1.
+            # so its K/V (or recurrent-state) entry lands at position n-1 —
+            # always in a private page, even when everything before it was a
+            # cache hit (a fully-cached prompt skips prefill entirely).
             self.cache_len = self.cache_len.at[slot].set(n - 1)
             self.last_token = self.last_token.at[slot].set(seq[-1])
         else:
-            self.cache_len = self.cache_len.at[slot].set(0)
+            self.cache_len = self.cache_len.at[slot].set(n_cached)
         return slot
 
     # -- preemption / page growth ---------------------------------------------
@@ -249,6 +314,7 @@ class ServingEngine:
         req = self.sched.preempt(slot)
         self.cache_len = self.cache_len.at[slot].set(0)
         self._slot_seq[slot] = None
+        self._slot_hashes[slot] = None   # partial prefill: never published
         self.alloc.free(slot)
         self.sched.enqueue(req, front=True)
 
@@ -258,6 +324,7 @@ class ServingEngine:
         req.t_done = time.monotonic()
         self.cache_len = self.cache_len.at[slot].set(0)
         self._slot_seq[slot] = None
+        self._slot_hashes[slot] = None
         self.alloc.free(slot)
         self._failed.append(req)
 
@@ -332,24 +399,31 @@ class ServingEngine:
                                            active=act_dev, **kw)
         temps = np.zeros((self.n_slots,), np.float32)
         topks = np.zeros((self.n_slots,), np.int32)
-        seeds = np.zeros((self.n_slots,), np.int32)
+        seeds = np.zeros((self.n_slots,), np.uint32)
         idxs = np.zeros((self.n_slots,), np.int32)
         for i in active:
             r = self.sched.slots[i].req
             temps[i] = r.temperature
             topks[i] = r.top_k
-            seeds[i] = r.rid if r.seed is None else r.seed
+            # rids/seeds may exceed 2^31 — fold, don't truncate (uint32)
+            seeds[i] = sampling.fold_seed(r.rid if r.seed is None else r.seed)
             idxs[i] = len(r.out)
         if temps.any():
+            # k_cap: pow-2 roundup of the largest requested top-k, so the
+            # sampler thresholds against a small static top_k instead of a
+            # full-vocab sort (<= O(log V) executables ever compile)
+            k_cap = next_pow2(max(int(topks.max()), 1))
             next_tok = self._sample(logits, jnp.asarray(temps),
                                     jnp.asarray(topks), jnp.asarray(seeds),
-                                    jnp.asarray(idxs))
+                                    jnp.asarray(idxs), k_cap=k_cap)
         else:  # all-greedy step (the default): skip the sampler's
-            # full-vocab sort + Gumbel draw on the hot path
+            # top-k threshold + Gumbel draw on the hot path
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.cache_len = self.cache_len + act_dev.astype(jnp.int32)
         self.last_token = jnp.where(act_dev, next_tok, self.last_token)
         toks = np.asarray(next_tok)
+        # one device->host sync for every slot's length, not one per slot
+        lens_host = np.asarray(self.cache_len)
         now = time.monotonic()
         for i in active:
             req = self.sched.slots[i].req
@@ -358,7 +432,7 @@ class ServingEngine:
                 req.t_first = now
             self.sched.on_decode_token(i)
             if (len(req.out) >= req.max_new
-                    or int(self.cache_len[i]) >= self.max_seq - 1):
+                    or int(lens_host[i]) >= self.max_seq - 1):
                 req.done = True
                 req.t_done = now
                 finished.append(req)
@@ -366,7 +440,14 @@ class ServingEngine:
                 self._slot_seq[i] = None
                 self.cache_len = self.cache_len.at[i].set(0)
                 if self.paged:
-                    self.alloc.free(i)  # pages return to the pool
+                    if self.prefix_cache_active and self._slot_hashes[i]:
+                        # publish-on-retire: the slot's full prompt blocks
+                        # (now completely written) become index entries; its
+                        # pages drop to refcount 0 in free() below but stay
+                        # warm on the cached-free LRU for future hits
+                        self.alloc.publish(i, self._slot_hashes[i])
+                    self._slot_hashes[i] = None
+                    self.alloc.free(i)  # refcounts drop; pool or LRU
         self.sched.tick()
         return finished
 
@@ -389,13 +470,19 @@ class ServingEngine:
             raise PagePoolExhausted(
                 f"request {req.rid} needs {need} pages but the pool only "
                 f"has {self.pcfg.n_pages - 1} allocatable")
+        if self.prefix_cache_active:
+            hashes, cap = self._prefix_hashes(req, n)
+            return self.alloc.can_admit(n, hits=self.alloc.lookup(hashes[:cap]))
         return self.alloc.can_admit(n)
 
     # -- the loop -------------------------------------------------------------
     def run(self, requests: list[Request], max_steps: int = 1000):
         """Serve ``requests`` to completion.  Preempted sequences re-enter
         ahead of fresh ones; requests the pool can never back come back with
-        ``req.error`` set instead of crashing the loop."""
+        ``req.error`` set instead of crashing the loop.  Exhausting
+        ``max_steps`` returns *every* request: unfinished ones (still in a
+        slot, preempted, or never admitted) come back with ``req.error``
+        set, ``done=False`` and whatever ``req.out`` they produced."""
         now = time.monotonic()
         for req in requests:
             if req.t_submit is None:
@@ -418,11 +505,32 @@ class ServingEngine:
                 self.add_request(self.sched.pop_queued())
             done.extend(self.step())
             steps += 1
-        # max_steps exhausted with work still queued: surface evicted
-        # requests rather than letting them vanish (partial req.out kept)
+        # max_steps exhausted with work still in flight: surface every
+        # unfinished request (slot-bound, preempted-unresumed, and
+        # never-admitted) with req.error set and partial req.out kept,
+        # rather than letting any of them vanish from the return value.
+        for slot in self.sched.occupied():
+            req = self.sched.release(slot)
+            self.cache_len = self.cache_len.at[slot].set(0)
+            self._slot_seq[slot] = None
+            if self.paged:
+                self._slot_hashes[slot] = None
+                self.alloc.free(slot)
+            req.error = req.error or (
+                f"evicted mid-flight at max_steps={max_steps}")
+            done.append(req)
         for req in self.sched.resume:
             req.error = req.error or (
                 f"preempted and not resumed within max_steps={max_steps}")
             done.append(req)
         self.sched.resume = []
+        for req in self.sched.pending:
+            req.error = req.error or (
+                f"never admitted within max_steps={max_steps}")
+            done.append(req)
+        self.sched.pending = []
+        now = time.monotonic()
+        for req in done:
+            if req.error is not None and req.t_done is None:
+                req.t_done = now   # terminal requests carry a completion mark
         return done

@@ -1,5 +1,6 @@
-"""Paged KV-cache bookkeeping: page pool sizing, per-slot page tables, and a
-host-side page allocator.
+"""Paged KV-cache bookkeeping: page pool sizing, per-slot page tables, a
+host-side page allocator with per-page refcounts, and the prefix-cache
+index that lets requests share identical prompt blocks.
 
 FAMOUS banks its attention operands into fixed-size BRAM tiles so one
 synthesis serves many shapes; the serving analogue is a *paged* KV cache:
@@ -10,14 +11,41 @@ HBM then scales with live tokens (``sum(ceil(len/page_size))`` pages), not
 with ``n_slots x max_seq``, so a single long-context request can coexist
 with many short ones in the same pool.
 
-Allocator invariants (checked by tests/test_paged.py):
+Prefix caching takes the reuse one rung further: the *contents* of a page
+are a pure function of the token block it holds plus everything before it,
+so identical prompt prefixes (shared system prompts, few-shot preambles)
+can alias the same physical pages across slots.  The allocator keeps
+
+  * a per-page **refcount** — a page may appear in several slots' tables;
+    aliased pages are read-only by construction (the engine only ever maps
+    *full* prompt blocks, and every write lands at positions past the
+    mapped prefix, i.e. in the slot's private tail pages — copy-on-write
+    degenerates to copy-never because the partial last block is always
+    prefilled privately);
+  * a **content-hash index** ``block hash -> page id`` over published
+    pages (the engine publishes a request's full prompt blocks when it
+    retires);
+  * a **cached-free LRU**: pages whose refcount drops to 0 but that are
+    still indexed.  They stay warm for future hits yet count as free
+    capacity — allocation reclaims the oldest on demand (evicting its
+    index entry), so a warm cache never blocks admission.
+
+Allocator invariants (checked by tests/test_paged.py and
+tests/test_prefix_cache.py via :meth:`PageAllocator.assert_invariants`):
 
   * page 0 is the *null page* — never handed out, it absorbs writes from
     inactive slots and padded prefill chunks; masked reads never see it.
-  * a live page id appears in exactly one slot's table (no aliasing).
-  * ``free(slot)`` returns every page of the slot and zeroes its table row.
-  * allocation beyond capacity raises :class:`PagePoolExhausted` and leaves
-    the allocator state untouched (clean admission control).
+  * every allocatable page is in exactly one of three states: on the free
+    list, on the cached-free LRU (refcount 0, indexed), or live
+    (refcount >= 1).
+  * a page's refcount equals the number of slot tables holding it.
+  * non-null writes only ever target pages with refcount 1 that sit past
+    the slot's shared prefix (the engine's COW rule).
+  * ``free(slot)`` drops one reference per held page and zeroes the table
+    row; pages reaching refcount 0 return to the free list, or to the
+    cached-free LRU if indexed.
+  * allocation beyond capacity raises :class:`PagePoolExhausted` and
+    leaves the allocator state untouched (clean admission control).
 
 The allocator is deliberately host-side (numpy): page ids change at request
 granularity, orders of magnitude slower than the decode step, and feeding
@@ -28,6 +56,8 @@ never re-synthesise").
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 
 import numpy as np
 
@@ -59,8 +89,25 @@ class PagedCacheConfig:
         return 1 + n_slots * (-(-max_seq // page_size))
 
 
+def block_hashes(tokens, page_size: int) -> list:
+    """Chained content hashes of the full ``page_size`` token blocks of
+    ``tokens`` (the partial tail block is never hashed: it is never
+    shareable).  Block j's hash covers blocks 0..j, so equal hashes imply
+    equal *prefixes* — a page's K/V content is a pure function of its hash.
+    """
+    out = []
+    digest = b""
+    for j in range(len(tokens) // page_size):
+        blk = np.asarray(tokens[j * page_size:(j + 1) * page_size],
+                         np.int64).tobytes()
+        digest = hashlib.blake2b(digest + blk, digest_size=16).digest()
+        out.append(digest)
+    return out
+
+
 class PageAllocator:
-    """Free-list allocator over page ids ``1..n_pages-1`` (0 is null)."""
+    """Refcounting free-list allocator over page ids ``1..n_pages-1``
+    (0 is null), with a prefix-cache index over published pages."""
 
     def __init__(self, cfg: PagedCacheConfig, n_slots: int, max_seq: int):
         assert cfg.n_pages >= 2, "pool needs the null page plus one real page"
@@ -71,6 +118,15 @@ class PageAllocator:
         # slot page tables; row s lists the pages of slot s, NULL_PAGE-padded.
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self._n_held = np.zeros((n_slots,), np.int32)
+        # leading pages of each slot that are *shared* (refcount may be > 1;
+        # read-only — all writes land past them)
+        self._n_shared = np.zeros((n_slots,), np.int32)
+        self._ref = np.zeros((cfg.n_pages,), np.int32)
+        # prefix cache: block hash -> page id, inverse map, and the LRU of
+        # refcount-0-but-still-indexed pages (reclaimed oldest-first)
+        self._index: dict = {}
+        self._page_hash: dict = {}
+        self._lru: OrderedDict = OrderedDict()
         # bumped on every table mutation so callers can cache derived state
         # (e.g. the device copy of the page table) and re-upload only when
         # allocation actually changed
@@ -79,18 +135,84 @@ class PageAllocator:
     # -- queries ------------------------------------------------------------
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages allocatable right now: truly free plus cached-free (the
+        LRU is reclaimed on demand, so a warm cache never blocks)."""
+        return len(self._free) + len(self._lru)
+
+    @property
+    def cached_free_pages(self) -> int:
+        return len(self._lru)
 
     def pages_held(self, slot: int) -> int:
         return int(self._n_held[slot])
 
-    def can_admit(self, n_tokens: int) -> bool:
-        return self.cfg.pages_for(max(n_tokens, 1)) <= self.free_pages
+    def pages_shared(self, slot: int) -> int:
+        return int(self._n_shared[slot])
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def can_admit(self, n_tokens: int, hits=()) -> bool:
+        """Would ``grow`` succeed for a fresh ``n_tokens`` admission whose
+        leading blocks hit the cached pages ``hits``?  Cached-free hits are
+        about to be pinned, so they cannot double as fresh capacity."""
+        need = self.cfg.pages_for(max(n_tokens, 1)) - len(hits)
+        avail = self.free_pages - sum(1 for p in hits if self._ref[p] == 0)
+        return need <= avail
+
+    # -- prefix cache --------------------------------------------------------
+    def lookup(self, hashes) -> list:
+        """Longest run of consecutive index hits from block 0 (a chained
+        hash only makes sense as a prefix).  Returns the hit page ids."""
+        pages = []
+        for h in hashes:
+            page = self._index.get(h)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def map_prefix(self, slot: int, pages) -> None:
+        """Alias cached ``pages`` (from :meth:`lookup`) into the head of an
+        empty slot's table, pinning each (refcount += 1; off the LRU)."""
+        assert self._n_held[slot] == 0, (slot, self._n_held[slot])
+        assert len(pages) <= self.pages_per_slot
+        for j, page in enumerate(pages):
+            self.page_table[slot, j] = page
+            self._ref[page] += 1
+            self._lru.pop(page, None)
+        self._n_held[slot] = len(pages)
+        self._n_shared[slot] = len(pages)
+        self.version += 1
+
+    def publish(self, slot: int, hashes) -> None:
+        """Index the slot's leading pages under ``hashes`` (one per full
+        prompt block) so future admissions can alias them.  Blocks whose
+        hash is already indexed are skipped — the existing page wins (this
+        slot's duplicate simply frees normally)."""
+        n = min(len(hashes), int(self._n_held[slot]))
+        for j in range(n):
+            h = hashes[j]
+            if h in self._index:
+                continue
+            page = int(self.page_table[slot, j])
+            self._index[h] = page
+            self._page_hash[page] = h
+
+    def _take_page(self) -> int:
+        """A fresh page: off the free list, else reclaim the LRU-oldest
+        cached-free page (evicting its index entry)."""
+        if self._free:
+            return self._free.pop()
+        page, _ = self._lru.popitem(last=False)
+        del self._index[self._page_hash.pop(page)]
+        return page
 
     # -- mutation -----------------------------------------------------------
     def grow(self, slot: int, n_tokens: int) -> None:
         """Ensure slot ``slot`` holds enough pages for ``n_tokens`` tokens.
-        Raises :class:`PagePoolExhausted` (state untouched) if it cannot."""
+        New pages are private (refcount 1).  Raises
+        :class:`PagePoolExhausted` (state untouched) if it cannot."""
         need = self.cfg.pages_for(n_tokens)
         if need > self.pages_per_slot:
             raise PagePoolExhausted(
@@ -100,20 +222,59 @@ class PageAllocator:
         short = need - held
         if short <= 0:
             return
-        if short > len(self._free):
+        if short > self.free_pages:
             raise PagePoolExhausted(
                 f"slot {slot} needs {short} more page(s) for {n_tokens} "
-                f"tokens; {len(self._free)} free of "
+                f"tokens; {self.free_pages} free of "
                 f"{self.cfg.n_pages - 1} allocatable")
         for j in range(held, need):
-            self.page_table[slot, j] = self._free.pop()
+            page = self._take_page()
+            self.page_table[slot, j] = page
+            self._ref[page] = 1
         self._n_held[slot] = need
         self.version += 1
 
     def free(self, slot: int) -> None:
-        """Retire a slot: return its pages and zero its table row."""
-        for j in range(int(self._n_held[slot])):
-            self._free.append(int(self.page_table[slot, j]))
+        """Retire a slot: drop one reference per held page and zero its
+        table row.  Pages reaching refcount 0 return to the free list —
+        or to the cached-free LRU if they are still indexed.  Deep blocks
+        park *older* on the LRU than head blocks: a chained-prefix lookup
+        stops at its first miss, so under reclaim pressure a prefix must
+        be eaten from its deep end — evicting block 0 first would leave
+        an unreachable suffix warm and the whole prefix cold."""
+        for j in reversed(range(int(self._n_held[slot]))):
+            page = int(self.page_table[slot, j])
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                if page in self._page_hash:
+                    self._lru[page] = None       # most-recently-used end
+                else:
+                    self._free.append(page)
         self.page_table[slot, :] = NULL_PAGE
         self._n_held[slot] = 0
+        self._n_shared[slot] = 0
         self.version += 1
+
+    # -- debug --------------------------------------------------------------
+    def assert_invariants(self) -> None:
+        """Exhaustive state check (tests; O(pool), not for the hot loop)."""
+        free, lru = set(self._free), set(self._lru)
+        live = {p for p in range(1, self.cfg.n_pages) if self._ref[p] > 0}
+        assert not (free & lru) and not (free & live) and not (lru & live), \
+            (free & lru, free & live, lru & live)
+        assert free | lru | live == set(range(1, self.cfg.n_pages))
+        assert self._ref[NULL_PAGE] == 0
+        counts = np.zeros_like(self._ref)
+        for s in range(self.n_slots):
+            held = int(self._n_held[s])
+            assert 0 <= self._n_shared[s] <= held
+            for j in range(held):
+                page = int(self.page_table[s, j])
+                assert page != NULL_PAGE
+                counts[page] += 1
+            assert (self.page_table[s, held:] == NULL_PAGE).all()
+        assert (counts == self._ref).all(), (counts, self._ref)
+        for page in lru:
+            assert page in self._page_hash
+        for h, page in self._index.items():
+            assert self._page_hash.get(page) == h

@@ -108,19 +108,25 @@ class Scheduler:
         return [i for i, s in enumerate(self.slots) if s.state != FREE]
 
     # -- lifecycle ------------------------------------------------------------
-    def bind(self, slot: int, req, n_tokens: int) -> str:
+    def bind(self, slot: int, req, n_tokens: int, cached: int = 0) -> str:
         """Admit ``req`` (sequence length ``n_tokens``) into ``slot``.
+        ``cached`` tokens at the head of the sequence are already resident
+        (prefix-cache hit): prefill starts at the first uncached token and
+        the saving is charged to the fairness ledger (``cached_tokens``).
         Returns the slot's state: PREFILL (chunks pending) or DECODE
-        (single-token sequence, nothing to prefill)."""
+        (nothing left to prefill — single-token, or fully cached)."""
         info = self.slots[slot]
         assert info.state == FREE, (slot, info.state)
         info.req = req
         info.admit_seq = self._admit_counter
         self._admit_counter += 1
         info.target = n_tokens - 1
-        info.done = 0
-        info.state = PREFILL if info.target > 0 else DECODE
-        self._stats(req)["admit_step"] = self.step_count
+        info.done = min(cached, info.target)
+        info.state = PREFILL if info.done < info.target else DECODE
+        st = self._stats(req)
+        st["admit_step"] = self.step_count
+        if info.done:
+            st["cached_tokens"] = st.get("cached_tokens", 0) + info.done
         return info.state
 
     def mark_prefilled(self, slot: int) -> None:
@@ -199,8 +205,9 @@ class Scheduler:
 
     def fairness(self, rid) -> dict:
         """Per-request accounting: queueing delay, TTFT in steps, work done,
-        preemption count — the host-side ledger behind the TTFT/TPOT
-        percentiles in benchmarks/serving_bench.py."""
+        prefix-cache savings (``cached_tokens``), preemption count — the
+        host-side ledger behind the TTFT/TPOT percentiles in
+        benchmarks/serving_bench.py."""
         st = dict(self.stats.get(rid, {}))
         if "enqueue_step" in st and "first_token_step" in st:
             st["ttft_steps"] = st["first_token_step"] - st["enqueue_step"]

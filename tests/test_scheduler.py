@@ -106,6 +106,21 @@ def test_preempt_victim_youngest_including_prefilling():
     assert s.stats[2]["preemptions"] == 1
 
 
+def test_bind_cached_prefix_starts_prefill_at_first_uncached_token():
+    """Prefix-cache admission: bind(cached=) skips the cached head — the
+    first chunk starts there, and a fully-cached target goes straight to
+    DECODE with the saving on the fairness ledger."""
+    s = Scheduler(2, SchedulerConfig(chunk=8, token_budget=64))
+    assert s.bind(0, _req(0, 21), 21, cached=16) == PREFILL   # target 20
+    plan = s.plan()
+    assert [(c.start, c.n) for c in plan.chunks if c.slot == 0] == [(16, 4)]
+    assert s.fairness(0)["cached_tokens"] == 16
+    # cached >= target: nothing to prefill at all
+    assert s.bind(1, _req(1, 17), 17, cached=16) == DECODE
+    assert s.slots[1].done == s.slots[1].target == 16
+    assert s.fairness(1)["cached_tokens"] == 16
+
+
 def test_fairness_accounting():
     s = Scheduler(1, SchedulerConfig(chunk=4))
     r = _req(7, 9)

@@ -215,3 +215,73 @@ def test_seeded_sampling_reproducible():
         [Request(rid=0, tokens=list(prompt), max_new=6, temperature=0.7,
                  top_k=1, seed=9)])[0].out
     assert k1 == greedy
+
+
+def test_sample_tokens_topk_matches_full_sort_reference():
+    """The lax.top_k thresholding path must be token-identical to the old
+    full-vocab-sort sampler for every (temperature, top_k) mix."""
+    from repro.serve import sampling
+
+    def reference(logits, temperature, top_k, seed, index):
+        def one(lg, t, k, s, idx):
+            greedy = jnp.argmax(lg).astype(jnp.int32)
+            v = lg.shape[-1]
+            kth = jnp.sort(lg)[::-1][jnp.clip(k, 1, v) - 1]
+            masked = jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+            key = jax.random.fold_in(jax.random.PRNGKey(s), idx)
+            g = jax.random.gumbel(key, lg.shape, lg.dtype)
+            sampled = jnp.argmax(masked / jnp.maximum(t, 1e-6) + g)
+            return jnp.where(t > 0, sampled.astype(jnp.int32), greedy)
+        return jax.vmap(one)(logits, temperature, top_k, seed, index)
+
+    rng = np.random.default_rng(7)
+    B, V = 6, 91
+    logits = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32))
+    temps = jnp.asarray([0.0, 0.7, 1.3, 0.5, 2.0, 1.0], jnp.float32)
+    topks = jnp.asarray([0, 5, 1, 20, 0, 64], jnp.int32)
+    seeds = np.asarray([0, 42, 7, 9, 11, 13], np.uint32)
+    idxs = jnp.asarray(rng.integers(0, 9, size=B), jnp.int32)
+    want = reference(logits, temps, topks, jnp.asarray(seeds), idxs)
+    for k_cap in (0, 64, 128):     # cap >= max(top_k): identical thresholds
+        got = sampling.sample_tokens(logits, temps, topks,
+                                     jnp.asarray(seeds), idxs, k_cap=k_cap)
+        assert (np.asarray(want) == np.asarray(got)).all(), k_cap
+
+
+def test_huge_rid_seed_fallback():
+    """seed=None falls back to the request id; rids >= 2^31 must neither
+    overflow the seed operand nor collide after uint32 folding."""
+    from repro.serve.sampling import fold_seed
+    assert fold_seed(42) == 42                       # identity below 2^32
+    assert fold_seed(2**40 + 3) != fold_seed(2**41 + 3)
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(8)
+    prompt = list(rng.integers(0, cfg.vocab_size, size=6))
+    engine = ServingEngine(params, cfg, FCFG, n_slots=2, max_seq=64)
+    done = sorted(engine.run(
+        [Request(rid=2**40 + i, tokens=list(prompt), max_new=8,
+                 temperature=2.0) for i in (0, 1)]), key=lambda r: r.rid)
+    assert all(r.error is None and len(r.out) == 8 for r in done)
+    assert done[0].out != done[1].out    # distinct rids -> distinct noise
+
+
+def test_run_max_steps_surfaces_every_request():
+    """Exhausting max_steps must return EVERY request — slot-bound
+    mid-flight, preempted, and never-admitted alike — with req.error set
+    instead of silently dropping them."""
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(9)
+    reqs = [Request(rid=i, tokens=list(rng.integers(0, cfg.vocab_size, 9)),
+                    max_new=4) for i in range(5)]
+    engine = ServingEngine(params, cfg, FCFG, n_slots=2, max_seq=64, chunk=8)
+    done = engine.run(reqs, max_steps=1)
+    assert sorted(r.rid for r in done) == list(range(5))
+    assert all(r.error is not None and not r.done for r in done)
+    assert all(r.t_done is not None for r in done)   # terminal timestamp
+    assert any("mid-flight" in r.error for r in done)       # the 2 slot-bound
+    assert any("never admitted" in r.error for r in done)   # the 3 queued
+    # the engine is reusable afterwards: slots and queues were cleaned up
+    ok = engine.run([Request(rid=9, tokens=[1, 2, 3], max_new=2)])
+    assert len(ok) == 1 and ok[0].error is None and len(ok[0].out) == 2
