@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.analysis import retrace_guard
 from repro.configs.base import get_config, shrink
 from repro.core.famous import FamousConfig
 from repro.models import module, transformer
@@ -127,10 +128,14 @@ def _bench_prefix(params, cfg):
     # hash collisions with the timed workload: the cold row stays cold)
     engine.run(_requests(cfg, seed=99))
     hit0 = engine.prefix_hit_pages
-    cold, cold_ttft = _timed_run(engine, _prefix_requests(cfg), "prefix_cold")
-    hit1 = engine.prefix_hit_pages   # late cold admissions may already hit
-    warm, warm_ttft = _timed_run(engine, _prefix_requests(cfg, rid0=N_REQ),
-                                 "prefix_warm")
+    # both timed rows run on the warm engine: zero new executables allowed
+    with retrace_guard(engine, label="prefix cold+warm timed runs"):
+        cold, cold_ttft = _timed_run(engine, _prefix_requests(cfg),
+                                     "prefix_cold")
+        hit1 = engine.prefix_hit_pages  # late cold admissions may already hit
+        warm, warm_ttft = _timed_run(engine,
+                                     _prefix_requests(cfg, rid0=N_REQ),
+                                     "prefix_warm")
     saved = engine.prefix_hit_pages - hit1
     common.emit("serving/prefix_warm_vs_cold",
                 _pct(warm_ttft, 50) * 1e3,  # us, for the us-valued column
@@ -142,8 +147,6 @@ def _bench_prefix(params, cfg):
     wout = [r.out for r in sorted(warm, key=lambda r: r.rid)]
     assert outs == wout, "warm prefix-cache outputs must be token-identical"
     assert saved > 0, "warm run must alias cached pages"
-    census = engine.compilations
-    assert sum(census.values()) <= 3, census  # CI tripwire
     assert _pct(warm_ttft, 50) < _pct(cold_ttft, 50), \
         (f"warm TTFT p50 {_pct(warm_ttft, 50):.1f}ms not below cold "
          f"{_pct(cold_ttft, 50):.1f}ms")

@@ -28,6 +28,11 @@ done
 [ "$fail" -eq 0 ] || { echo "doc-link check failed"; exit 1; }
 echo "doc links ok"
 
+# --- static analysis: lint vs baseline, Pallas contract check against live
+# kernel launches, retrace guard on a warmed engine (repro.analysis) --------
+echo "== static analysis =="
+python -m repro.analysis
+
 # --- quickstart smoke: the three impls must still agree --------------------
 echo "== examples/quickstart.py smoke =="
 python examples/quickstart.py

@@ -1,0 +1,30 @@
+"""Static-analysis subsystem: the software analogue of FAMOUS's
+synthesis-time resource checks.
+
+Three passes, one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.lint` — an AST linter over ``src/repro`` for
+  jit-unsafe anti-patterns (per-iteration host syncs, eager ``.at[].set``
+  scatters in Python loops, ``jax.jit`` calls missing static-arg
+  declarations, and the scheduler purity contract), with a checked-in
+  baseline so accepted legacy findings don't block CI while new
+  regressions do.
+* :mod:`repro.analysis.kernel_check` — a Pallas launch contract checker
+  hooked through :func:`repro.kernels.pallas_compat.pallas_call`: block
+  shapes must divide array dims, index_maps must match the grid rank and
+  stay in bounds, output grids must cover their arrays, and the per-step
+  VMEM footprint must fit a configurable budget (the on-chip BRAM/URAM
+  accounting of the paper, §IV-B).
+* :mod:`repro.analysis.retrace_guard` — a context manager that fails when
+  a steady-state region (warm decode loop, warm prefix-cache serving)
+  compiles anything new, replacing ad-hoc executable-count assertions.
+"""
+from repro.analysis.kernel_check import (KernelContractError, checking,
+                                         kernel_check_enabled)
+from repro.analysis.lint import Finding, lint_paths, lint_source
+from repro.analysis.retrace_guard import RetraceError, retrace_guard
+
+__all__ = [
+    "Finding", "KernelContractError", "RetraceError", "checking",
+    "kernel_check_enabled", "lint_paths", "lint_source", "retrace_guard",
+]

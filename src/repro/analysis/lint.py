@@ -1,0 +1,386 @@
+"""AST linter for jit-unsafe anti-patterns in the serving/runtime code.
+
+The serving hot loop gets its O(1)-executables and low-dispatch-overhead
+guarantees from a handful of disciplines that nothing used to enforce:
+device values must not be pulled to the host one element at a time, device
+state must not be rebuilt with per-element ``.at[].set`` scatters inside
+Python loops (one dispatch each, ~1.3 ms on CPU — more than a tiny-model
+forward), ``jax.jit`` must be told which arguments are static, and the
+Scheduler must stay pure policy (importing ``jax`` there would let device
+state leak into what is by design host-only code).  This module turns each
+discipline into a rule:
+
+``RA001 host-sync-in-loop``
+    ``int()`` / ``float()`` / ``np.asarray()`` / ``np.array()`` /
+    ``jax.device_get()`` applied to a device-tainted value inside a Python
+    loop (or comprehension).  Each call is one blocking device->host sync;
+    hoist to a single ``np.asarray`` pull before the loop.
+``RA002 eager-scatter-in-loop``
+    ``x.at[...].set(...)`` (or ``.add``/``.mul``/...) inside a Python
+    loop.  Each is a full dispatch + device array rebuild; batch the
+    updates or keep the state in host numpy.
+``RA003 jit-missing-static``
+    ``jax.jit(f)`` without ``static_argnames``/``static_argnums`` where
+    ``f`` (resolvable in the same module) has ``str``- or ``bool``-typed
+    parameters (default value or annotation) — values jit would either
+    fail on or silently retrace per distinct value.
+``RA004 impure-scheduler``
+    any ``jax``/``jaxlib`` import in a module declared pure-policy
+    (``serve/scheduler.py``).  Zero allowlist entries by design.
+
+Device taint is a deliberately simple per-function analysis: expressions
+rooted at ``jnp.*`` / ``jax.numpy`` / ``jax.lax`` / ``jax.random`` are
+device; ``self.X`` is device when any assignment in the class binds it to
+a device expression; a local takes the taint of what it was last assigned
+(``np.asarray(...)``/``int(...)``/``float(...)`` launder back to host —
+that single call *is* the blessed hoisted sync).  Precision over recall:
+the linter only reports what it can see is device-backed, so host numpy
+bookkeeping (page tables, slot masks) never false-positives.
+
+Findings are compared against a checked-in baseline
+(``analysis/lint_baseline.txt``): entries are ``path::rule::normalised
+source line`` fingerprints, stable across unrelated edits.  New findings
+fail CI; baseline entries that no longer match are reported as stale.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+RULES = {
+    "RA001": "host-sync-in-loop: per-iteration device->host sync "
+             "(int()/float()/np.asarray() on a device value inside a "
+             "Python loop); hoist one np.asarray() pull above the loop",
+    "RA002": "eager-scatter-in-loop: .at[...].set()-style scatter inside "
+             "a Python loop dispatches once per element; batch the "
+             "updates or keep this state in host numpy",
+    "RA003": "jit-missing-static: jax.jit of a function with str/bool "
+             "parameters but no static_argnames/static_argnums",
+    "RA004": "impure-scheduler: pure-policy module must not import jax",
+}
+
+# modules (repo-relative under src/repro) contractually free of jax —
+# RA004 admits no baseline entries for these
+PURE_MODULES = ("serve/scheduler.py",)
+
+_DEVICE_ROOTS = ("jnp", "jax.numpy", "jax.lax", "jax.random", "jax.nn")
+_SYNC_CALLS = ("int", "float", "np.asarray", "np.array", "numpy.asarray",
+               "numpy.array", "jax.device_get")
+_HOST_PRODUCERS = _SYNC_CALLS + ("np.zeros", "np.ones", "np.arange",
+                                 "numpy.zeros", "numpy.ones", "len")
+_SCATTER_METHODS = ("set", "add", "subtract", "sub", "multiply", "mul",
+                    "divide", "div", "power", "min", "max", "apply")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str       # repo-relative, e.g. "serve/engine.py"
+    line: int
+    rule: str
+    detail: str
+    snippet: str    # whitespace-normalised source line (the fingerprint key)
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.path}::{self.rule}::{self.snippet}"
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} {self.detail}\n"
+                f"    {self.snippet}")
+
+
+def _dotted(node) -> str | None:
+    """``a.b.c`` attribute/name chain as a string, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _normalise(line: str) -> str:
+    return re.sub(r"\s+", " ", line.strip())
+
+
+def _is_device_root(dotted: str) -> bool:
+    return any(dotted == r or dotted.startswith(r + ".")
+               for r in _DEVICE_ROOTS)
+
+
+class _ClassAttrs(ast.NodeVisitor):
+    """First pass over a ClassDef: which ``self.X`` attrs are ever bound
+    to a device expression anywhere in the class."""
+
+    def __init__(self):
+        self.device_attrs: set = set()
+
+    def visit_Assign(self, node):
+        taint = _expr_device(node.value, set(), set())
+        for tgt in node.targets:
+            if (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self" and taint):
+                self.device_attrs.add(tgt.attr)
+        self.generic_visit(node)
+
+
+def _expr_device(node, tainted_locals: set, device_attrs: set) -> bool:
+    """Does this expression reference anything device-backed?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Attribute, ast.Name)):
+            d = _dotted(sub)
+            if d is None:
+                continue
+            if _is_device_root(d):
+                return True
+            root = d.split(".")[0]
+            if root in tainted_locals:
+                return True
+            if (d.startswith("self.")
+                    and d.split(".")[1] in device_attrs):
+                return True
+        # x.at[...] only exists on jax arrays
+        if isinstance(sub, ast.Attribute) and sub.attr == "at":
+            return True
+    return False
+
+
+class _FunctionLinter(ast.NodeVisitor):
+    """Per-function walk tracking loop depth and local device taint."""
+
+    def __init__(self, module: "_ModuleLinter", device_attrs: set):
+        self.m = module
+        self.device_attrs = device_attrs
+        self.tainted: set = set()
+        self.loop_depth = 0
+
+    # -- taint bookkeeping --------------------------------------------------
+    def _rhs_taint(self, value) -> str:
+        if isinstance(value, ast.Call):
+            fn = _dotted(value.func)
+            if fn in _HOST_PRODUCERS:
+                return "host"
+        if _expr_device(value, self.tainted, self.device_attrs):
+            return "device"
+        return "host"
+
+    def _bind(self, target, taint: str):
+        if isinstance(target, ast.Name):
+            if taint == "device":
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, taint)
+
+    def visit_Assign(self, node):
+        self.generic_visit(node)
+        taint = self._rhs_taint(node.value)
+        for tgt in node.targets:
+            self._bind(tgt, taint)
+
+    def visit_AnnAssign(self, node):
+        self.generic_visit(node)
+        if node.value is not None:
+            self._bind(node.target, self._rhs_taint(node.value))
+
+    def visit_AugAssign(self, node):
+        self.generic_visit(node)
+        if self._rhs_taint(node.value) == "device":
+            self._bind(node.target, "device")
+
+    # -- loops ---------------------------------------------------------------
+    def _loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _loop
+    visit_ListComp = visit_SetComp = visit_DictComp = _loop
+    visit_GeneratorExp = _loop
+
+    # -- nested defs start a fresh scope outside any loop --------------------
+    def _nested(self, node):
+        inner = _FunctionLinter(self.m, self.device_attrs)
+        for stmt in node.body if not isinstance(node, ast.Lambda) \
+                else [node.body]:
+            inner.visit(stmt)
+
+    visit_FunctionDef = visit_AsyncFunctionDef = visit_Lambda = _nested
+
+    # -- the rules -----------------------------------------------------------
+    def visit_Call(self, node):
+        self.generic_visit(node)
+        fn = _dotted(node.func)
+        # RA001: per-iteration host sync
+        if (self.loop_depth and fn in _SYNC_CALLS and node.args
+                and _expr_device(node.args[0], self.tainted,
+                                 self.device_attrs)):
+            self.m.report(node, "RA001",
+                          f"`{fn}()` syncs a device value every iteration")
+        # RA002: x.at[...].set(...) in a loop
+        if (self.loop_depth and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SCATTER_METHODS
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"):
+            self.m.report(node, "RA002",
+                          f"`.at[...].{node.func.attr}()` scatter inside "
+                          f"a Python loop")
+        # RA003: jax.jit without static declarations
+        if fn in ("jax.jit", "jit") and (fn == "jax.jit"
+                                         or "jit" in self.m.jax_names):
+            kw = {k.arg for k in node.keywords}
+            if not ({"static_argnames", "static_argnums"} & kw):
+                self._check_jit_target(node)
+
+    def _check_jit_target(self, node):
+        if not node.args or not isinstance(node.args[0], ast.Name):
+            return
+        fdef = self.m.funcdefs.get(node.args[0].id)
+        if fdef is None:
+            return
+        static = _static_params(fdef)
+        if static:
+            self.m.report(
+                node, "RA003",
+                f"`jax.jit({node.args[0].id})` but parameter(s) "
+                f"{', '.join(sorted(static))} are str/bool-typed; declare "
+                f"static_argnames")
+
+
+def _static_params(fdef) -> list:
+    """Parameters of ``fdef`` whose default or annotation is str/bool."""
+    out = []
+    args = fdef.args
+    pos = args.posonlyargs + args.args
+    defaults = [None] * (len(pos) - len(args.defaults)) + list(args.defaults)
+    pairs = list(zip(pos, defaults)) + \
+        list(zip(args.kwonlyargs, args.kw_defaults))
+    for a, d in pairs:
+        if (isinstance(d, ast.Constant) and isinstance(d.value, (str, bool))):
+            out.append(a.arg)
+        elif (isinstance(a.annotation, ast.Name)
+                and a.annotation.id in ("str", "bool")):
+            out.append(a.arg)
+    return out
+
+
+class _ModuleLinter:
+    def __init__(self, path: str, src: str):
+        self.path = path
+        self.lines = src.splitlines()
+        self.findings: list = []
+        self.tree = ast.parse(src, filename=path)
+        self.funcdefs = {n.name: n for n in ast.walk(self.tree)
+                         if isinstance(n, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef))}
+        # names imported from jax (``from jax import jit``)
+        self.jax_names: set = set()
+        for n in ast.walk(self.tree):
+            if isinstance(n, ast.ImportFrom) and (n.module or "") == "jax":
+                self.jax_names |= {a.asname or a.name for a in n.names}
+
+    def report(self, node, rule: str, detail: str):
+        line = getattr(node, "lineno", 0)
+        snippet = _normalise(self.lines[line - 1]) if \
+            0 < line <= len(self.lines) else ""
+        self.findings.append(Finding(self.path, line, rule, detail, snippet))
+
+    def run(self) -> list:
+        self._check_purity()
+        for node in self.tree.body:
+            self._lint_scope(node, device_attrs=set())
+        return self.findings
+
+    def _check_purity(self):
+        if not any(self.path == p or self.path.endswith("/" + p)
+                   for p in PURE_MODULES):
+            return
+        for n in ast.walk(self.tree):
+            mods = []
+            if isinstance(n, ast.Import):
+                mods = [a.name for a in n.names]
+            elif isinstance(n, ast.ImportFrom):
+                mods = [n.module or ""]
+            for mod in mods:
+                if mod.split(".")[0] in ("jax", "jaxlib"):
+                    self.report(n, "RA004",
+                                f"pure-policy module imports `{mod}`")
+
+    def _lint_scope(self, node, device_attrs: set):
+        if isinstance(node, ast.ClassDef):
+            collector = _ClassAttrs()
+            collector.visit(node)
+            for stmt in node.body:
+                self._lint_scope(stmt, collector.device_attrs)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            linter = _FunctionLinter(self, device_attrs)
+            for stmt in node.body:
+                linter.visit(stmt)
+        elif isinstance(node, (ast.If, ast.Try, ast.With)):
+            for stmt in ast.iter_child_nodes(node):
+                self._lint_scope(stmt, device_attrs)
+
+
+def lint_source(src: str, path: str = "<string>") -> list:
+    """Lint one module's source; ``path`` is used for reporting and for
+    the purity contract (match against :data:`PURE_MODULES`)."""
+    return _ModuleLinter(path, src).run()
+
+
+def lint_paths(root: str) -> list:
+    """Lint every ``*.py`` under ``root`` (the ``src/repro`` package
+    directory); finding paths are reported relative to ``root``."""
+    findings = []
+    for dirpath, _dirnames, filenames in sorted(os.walk(root)):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fn)
+            rel = os.path.relpath(full, root).replace(os.sep, "/")
+            with open(full, encoding="utf-8") as f:
+                findings.extend(lint_source(f.read(), rel))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# baseline / allowlist
+# --------------------------------------------------------------------------
+
+BASELINE_FILE = os.path.join(os.path.dirname(__file__), "lint_baseline.txt")
+
+
+def load_baseline(path: str = BASELINE_FILE) -> set:
+    if not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as f:
+        return {ln.strip() for ln in f
+                if ln.strip() and not ln.lstrip().startswith("#")}
+
+
+def write_baseline(findings, path: str = BASELINE_FILE) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("# repro.analysis lint baseline — accepted findings.\n"
+                "# One `path::rule::normalised source line` per line;\n"
+                "# regenerate with `python -m repro.analysis "
+                "--update-baseline`.\n")
+        for fp in sorted({x.fingerprint for x in findings}):
+            f.write(fp + "\n")
+
+
+def compare_to_baseline(findings, baseline: set):
+    """(new findings, stale baseline entries).  RA004 findings in
+    :data:`PURE_MODULES` are never baselined-away — purity admits no
+    allowlist."""
+    fps = {x.fingerprint for x in findings}
+    new = [x for x in findings
+           if x.fingerprint not in baseline or x.rule == "RA004"]
+    stale = sorted(baseline - fps)
+    return new, stale

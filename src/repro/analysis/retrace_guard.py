@@ -1,0 +1,68 @@
+"""Retrace guard: fail when a steady-state region compiles anything new.
+
+The serving engine's whole design (PR 3) is that after warmup the hot
+loop runs exactly two executables — one chunked-prefill step and one
+decode step — for *any* request mix.  That O(1)-executables invariant
+used to be asserted ad hoc (``sum(census.values()) <= 3`` sprinkled over
+tests and benchmarks), which checks an absolute count including warmup
+rather than the property that actually matters: **a warm region must not
+compile**.  This context manager snapshots a compilation census on entry
+and raises :class:`RetraceError` on exit if anything grew:
+
+    with retrace_guard(engine):          # engine already warmed
+        engine.run(requests)             # steady-state: zero new compiles
+
+Any subject with a ``compilations`` attribute works: the engine (census
+dict), :class:`repro.core.flexible.FlexibleAttention` (int counter), or a
+zero-arg callable returning either.  ``allow=`` admits a known number of
+deliberate compilations (e.g. a first-use cold path inside an otherwise
+warm region).
+"""
+from __future__ import annotations
+
+import contextlib
+
+
+class RetraceError(AssertionError):
+    """A guarded steady-state region compiled new executables."""
+
+
+def census(subject) -> dict:
+    """Normalise a subject's compilation census to ``{key: count}``."""
+    c = getattr(subject, "compilations", None)
+    if c is None and callable(subject):
+        c = subject()
+    if callable(c):
+        c = c()
+    if isinstance(c, dict):
+        return {str(k): int(v) for k, v in c.items()}
+    if isinstance(c, (int, float)):
+        return {"compilations": int(c)}
+    raise TypeError(
+        f"retrace_guard subject {subject!r} has no usable `compilations` "
+        f"census (need an int, a dict, or a callable returning one)")
+
+
+@contextlib.contextmanager
+def retrace_guard(*subjects, allow: int = 0, label: str = ""):
+    """Assert that no subject compiles more than ``allow`` new
+    executables (total, across all subjects) inside the ``with`` body."""
+    if not subjects:
+        raise ValueError("retrace_guard needs at least one subject")
+    before = [census(s) for s in subjects]
+    yield
+    grew = []
+    total = 0
+    for s, b in zip(subjects, before):
+        a = census(s)
+        for key in sorted(set(a) | set(b)):
+            delta = a.get(key, 0) - b.get(key, 0)
+            if delta > 0:
+                total += delta
+                grew.append(f"{type(s).__name__}.{key}: "
+                            f"{b.get(key, 0)} -> {a.get(key, 0)}")
+    if total > allow:
+        where = f" [{label}]" if label else ""
+        raise RetraceError(
+            f"steady-state region{where} compiled {total} new "
+            f"executable(s) (allow={allow}):\n  " + "\n  ".join(grew))

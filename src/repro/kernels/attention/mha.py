@@ -119,7 +119,7 @@ def mha_forward(q, k, v, *, causal: bool = True, window: int = 0,
         _mha_kernel, scale=float(scale), causal=causal, window=window,
         block_q=block_q, block_k=block_k, num_k_blocks=nk, q_offset=q_offset)
 
-    out, lse = pl.pallas_call(
+    out, lse = pc.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -259,7 +259,7 @@ def mha_backward(q, k, v, out, lse, dout, *, causal: bool = True,
         (1, block_k, dh), lambda bh, iq, ik, group=group: (bh // group, ik, 0))
     row_spec = pl.BlockSpec((1, block_q), lambda bh, iq, ik: (bh, iq))
 
-    dq = pl.pallas_call(
+    dq = pc.pallas_call(
         functools.partial(_mha_bwd_dq_kernel, num_k_blocks=nk, **common),
         grid=(BH, nq, nk),
         in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
@@ -279,7 +279,7 @@ def mha_backward(q, k, v, out, lse, dout, *, causal: bool = True,
     row_spec_t = pl.BlockSpec((1, block_q), lambda bh, ik, iq: (bh, iq))
     dkv_spec = pl.BlockSpec((1, block_k, dh), lambda bh, ik, iq: (bh, ik, 0))
 
-    dk, dv = pl.pallas_call(
+    dk, dv = pc.pallas_call(
         functools.partial(_mha_bwd_dkv_kernel, num_q_blocks=nq, **common),
         grid=(BH, nk, nq),
         in_specs=[q_spec_t, kv_spec_t, kv_spec_t, q_spec_t, row_spec_t,

@@ -88,7 +88,7 @@ def chunk_prefill(q, k_cache, v_cache, q_offset, *, chunk: int,
     off = jnp.asarray(q_offset, jnp.int32).reshape(1, 1)
     kernel = functools.partial(_chunk_prefill_kernel, scale=float(scale),
                                block_k=block_k, n_k=n_k, chunk=chunk)
-    return pl.pallas_call(
+    return pc.pallas_call(
         kernel,
         grid=(BKV, n_k),
         in_specs=[
@@ -186,7 +186,7 @@ def paged_chunk_prefill(q, k_pages, v_pages, page_table, q_offset, *,
             pc.VMEM((rows, 1), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    return pc.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, rows, dh), q.dtype),

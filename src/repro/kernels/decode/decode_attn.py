@@ -148,7 +148,7 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
             pc.VMEM((group, 1), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    return pc.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, group, dh), q.dtype),
@@ -174,7 +174,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
     lens = cache_len.reshape(BKV, 1).astype(jnp.int32)
     kernel = functools.partial(_decode_kernel, scale=float(scale),
                                block_k=block_k, n_k=n_k, window=window)
-    return pl.pallas_call(
+    return pc.pallas_call(
         kernel,
         grid=grid,
         in_specs=[

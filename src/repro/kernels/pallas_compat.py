@@ -1,4 +1,5 @@
-"""Pallas TPU API compatibility layer across jax versions.
+"""Pallas TPU API compatibility layer across jax versions, plus the
+contract-checked ``pallas_call`` entry point.
 
 The Pallas TPU surface was renamed between jax 0.4.x and 0.5+:
 
@@ -14,9 +15,18 @@ names from here instead of reaching into ``pltpu`` directly, so the same
 kernel source runs on either jax line.  ``pltpu.VMEM(shape, dtype)``
 scratch constructors and the ``dimension_semantics`` kwarg spelling are
 stable across both lines and are re-exported for uniformity.
+
+All kernel families also launch through :func:`pallas_call` below rather
+than ``pl.pallas_call`` directly: a drop-in wrapper that, when the
+static-analysis hook is enabled (``REPRO_KERNEL_CHECK=1``, or globally in
+the test suite), validates the launch's BlockSpec/grid/VMEM contract
+against the actual operands before dispatching — see
+:mod:`repro.analysis.kernel_check`.  Disabled (the default), the only
+overhead is one predicate call per launch.
 """
 from __future__ import annotations
 
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 # --- compiler params -------------------------------------------------------
@@ -47,3 +57,25 @@ def compiler_params(*dimension_semantics: str, **kwargs):
     """
     return CompilerParams(dimension_semantics=tuple(dimension_semantics),
                           **kwargs)
+
+
+def pallas_call(kernel, **kwargs):
+    """Contract-checked ``pl.pallas_call``.
+
+    Same signature and return value as ``pl.pallas_call``; when
+    :func:`repro.analysis.kernel_check.kernel_check_enabled` is true, the
+    returned callable first validates block divisibility, index_map
+    arity/bounds, output-grid coverage and the estimated VMEM footprint
+    against the concrete operands (raising
+    :class:`~repro.analysis.kernel_check.KernelContractError` with every
+    violation) before delegating to the real launch.
+    """
+    inner = pl.pallas_call(kernel, **kwargs)
+
+    def checked(*args):
+        from repro.analysis import kernel_check
+        if kernel_check.kernel_check_enabled():
+            kernel_check.check_pallas_launch(kernel, kwargs, args)
+        return inner(*args)
+
+    return checked

@@ -68,7 +68,7 @@ def _matmul_call(x, w, block_t, block_f, block_d, out_dtype, interpret):
     assert T % block_t == 0 and F % block_f == 0 and D % block_d == 0
     n_d = D // block_d
     grid = (T // block_t, F // block_f, n_d)
-    return pl.pallas_call(
+    return pc.pallas_call(
         functools.partial(_proj_kernel, n_d=n_d),
         grid=grid,
         in_specs=[
@@ -126,7 +126,7 @@ def matmul_tiled_int8(xq, wq, sx, sw, *, block_t: int = 256,
     assert T % block_t == 0 and F % block_f == 0 and D % block_d == 0
     n_d = D // block_d
     grid = (T // block_t, F // block_f, n_d)
-    return pl.pallas_call(
+    return pc.pallas_call(
         functools.partial(_proj_kernel_int8, n_d=n_d),
         grid=grid,
         in_specs=[

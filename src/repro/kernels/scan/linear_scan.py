@@ -54,7 +54,7 @@ def rglru_scan(a, b, *, block_r: int = 512, block_s: int = 256,
     block_s = min(block_s, S)
     assert S % block_s == 0 and R % block_r == 0
     grid = (B, R // block_r, S // block_s)
-    return pl.pallas_call(
+    return pc.pallas_call(
         functools.partial(_rglru_kernel, block_s=block_s),
         grid=grid,
         in_specs=[
@@ -124,7 +124,7 @@ def wkv6_scan(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
     n_chunks = S // chunk
     grid = (BH, n_chunks)
     u2 = u.reshape(BH, 1, dh)
-    return pl.pallas_call(
+    return pc.pallas_call(
         functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks),
         grid=grid,
         in_specs=[

@@ -149,8 +149,13 @@ class ServingEngine:
         self.prefix_hit_pages = 0      # pages aliased instead of allocated
         self.prefix_hit_tokens = 0     # tokens whose prefill was skipped
         self._slot_hashes: list[Optional[list]] = [None] * n_slots
-        self.cache_len = jnp.zeros((n_slots,), jnp.int32)
-        self.last_token = jnp.zeros((n_slots,), jnp.int32)
+        # per-slot sequence state lives on the HOST: slot-granular updates
+        # are plain numpy writes (an eager jnp ``.at[].set`` costs a full
+        # dispatch each, ~1.3 ms on CPU — more than a tiny-model forward)
+        # and the arrays are materialized on device once per launch as
+        # ordinary decode-step operands (repro.analysis lint rule RA002)
+        self.cache_len = np.zeros((n_slots,), np.int32)
+        self.last_token = np.zeros((n_slots,), np.int32)
         self._slot_seq: list[Optional[list]] = [None] * n_slots
         self._failed: list[Request] = []
         self._pt_version = -1          # device page-table cache key
@@ -298,10 +303,10 @@ class ServingEngine:
             # so its K/V (or recurrent-state) entry lands at position n-1 —
             # always in a private page, even when everything before it was a
             # cache hit (a fully-cached prompt skips prefill entirely).
-            self.cache_len = self.cache_len.at[slot].set(n - 1)
-            self.last_token = self.last_token.at[slot].set(seq[-1])
+            self.cache_len[slot] = n - 1
+            self.last_token[slot] = seq[-1]
         else:
-            self.cache_len = self.cache_len.at[slot].set(n_cached)
+            self.cache_len[slot] = n_cached
         return slot
 
     # -- preemption / page growth ---------------------------------------------
@@ -312,7 +317,7 @@ class ServingEngine:
         copied or swapped out.  Mid-prefill victims simply restart their
         prefill."""
         req = self.sched.preempt(slot)
-        self.cache_len = self.cache_len.at[slot].set(0)
+        self.cache_len[slot] = 0
         self._slot_seq[slot] = None
         self._slot_hashes[slot] = None   # partial prefill: never published
         self.alloc.free(slot)
@@ -322,7 +327,7 @@ class ServingEngine:
         req = self.sched.release(slot)
         req.error, req.done = err, True
         req.t_done = time.monotonic()
-        self.cache_len = self.cache_len.at[slot].set(0)
+        self.cache_len[slot] = 0
         self._slot_seq[slot] = None
         self._slot_hashes[slot] = None
         self.alloc.free(slot)
@@ -332,13 +337,12 @@ class ServingEngine:
         """Reserve the next token's page for every decoding slot, preempting
         youngest-first (decoding *or* prefilling) when the pool runs dry.
         A lone sequence that cannot grow is failed rather than crashing."""
-        lens = np.asarray(self.cache_len)
         for i in list(active):
             if i not in active:
                 continue
             while True:
                 try:
-                    self.alloc.grow(i, int(lens[i]) + 1)
+                    self.alloc.grow(i, int(self.cache_len[i]) + 1)
                     break
                 except PagePoolExhausted as e:
                     victim = self.sched.preempt_victim()
@@ -374,13 +378,11 @@ class ServingEngine:
                     self.params, jnp.asarray(toks), self.caches,
                     jnp.int32(ch.slot), jnp.int32(ch.start), jnp.int32(ch.n),
                     **kw)
-                self.cache_len = self.cache_len.at[ch.slot].set(
-                    ch.start + ch.n)
+                self.cache_len[ch.slot] = ch.start + ch.n
                 if self.sched.on_chunk(ch.slot, ch.n):
                     # prefill complete: decode restarts at the last token,
                     # whose K/V entry is then written exactly once at n-1
-                    self.last_token = self.last_token.at[ch.slot].set(
-                        seq[-1])
+                    self.last_token[ch.slot] = seq[-1]
         # --- decode ----------------------------------------------------------
         active = list(plan.decode_slots)
         if self.paged and active:
@@ -394,8 +396,12 @@ class ServingEngine:
         act[active] = True
         act_dev = jnp.asarray(act)
         kw = {"page_table": self._page_table()} if self.paged else {}
-        logits, self.caches = self._decode(self.params, self.last_token,
-                                           self.caches, self.cache_len,
+        # host numpy slot state is materialized on device here, once per
+        # launch, as plain operands of the (warm) decode executable
+        logits, self.caches = self._decode(self.params,
+                                           jnp.asarray(self.last_token),
+                                           self.caches,
+                                           jnp.asarray(self.cache_len),
                                            active=act_dev, **kw)
         temps = np.zeros((self.n_slots,), np.float32)
         topks = np.zeros((self.n_slots,), np.int32)
@@ -419,11 +425,9 @@ class ServingEngine:
         else:  # all-greedy step (the default): skip the sampler's
             # top-k threshold + Gumbel draw on the hot path
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.cache_len = self.cache_len + act_dev.astype(jnp.int32)
-        self.last_token = jnp.where(act_dev, next_tok, self.last_token)
-        toks = np.asarray(next_tok)
-        # one device->host sync for every slot's length, not one per slot
-        lens_host = np.asarray(self.cache_len)
+        toks = np.asarray(next_tok)   # the step's ONE device->host sync
+        self.cache_len[act] += 1
+        self.last_token[act] = toks[act]
         now = time.monotonic()
         for i in active:
             req = self.sched.slots[i].req
@@ -432,13 +436,13 @@ class ServingEngine:
                 req.t_first = now
             self.sched.on_decode_token(i)
             if (len(req.out) >= req.max_new
-                    or int(lens_host[i]) >= self.max_seq - 1):
+                    or int(self.cache_len[i]) >= self.max_seq - 1):
                 req.done = True
                 req.t_done = now
                 finished.append(req)
                 self.sched.release(i)
                 self._slot_seq[i] = None
-                self.cache_len = self.cache_len.at[i].set(0)
+                self.cache_len[i] = 0
                 if self.paged:
                     if self.prefix_cache_active and self._slot_hashes[i]:
                         # publish-on-retire: the slot's full prompt blocks
@@ -511,7 +515,7 @@ class ServingEngine:
         # rather than letting any of them vanish from the return value.
         for slot in self.sched.occupied():
             req = self.sched.release(slot)
-            self.cache_len = self.cache_len.at[slot].set(0)
+            self.cache_len[slot] = 0
             self._slot_seq[slot] = None
             if self.paged:
                 self._slot_hashes[slot] = None

@@ -191,11 +191,12 @@ class PageAllocator:
         hash is already indexed are skipped — the existing page wins (this
         slot's duplicate simply frees normally)."""
         n = min(len(hashes), int(self._n_held[slot]))
+        row = self.page_table[slot, :n].tolist()   # one pull, not n
         for j in range(n):
             h = hashes[j]
             if h in self._index:
                 continue
-            page = int(self.page_table[slot, j])
+            page = row[j]
             self._index[h] = page
             self._page_hash[page] = h
 
@@ -242,8 +243,8 @@ class PageAllocator:
         stops at its first miss, so under reclaim pressure a prefix must
         be eaten from its deep end — evicting block 0 first would leave
         an unreachable suffix warm and the whole prefix cold."""
-        for j in reversed(range(int(self._n_held[slot]))):
-            page = int(self.page_table[slot, j])
+        held = int(self._n_held[slot])
+        for page in self.page_table[slot, :held][::-1].tolist():  # one pull
             self._ref[page] -= 1
             if self._ref[page] == 0:
                 if page in self._page_hash:
@@ -268,8 +269,7 @@ class PageAllocator:
         for s in range(self.n_slots):
             held = int(self._n_held[s])
             assert 0 <= self._n_shared[s] <= held
-            for j in range(held):
-                page = int(self.page_table[s, j])
+            for page in self.page_table[s, :held].tolist():
                 assert page != NULL_PAGE
                 counts[page] += 1
             assert (self.page_table[s, held:] == NULL_PAGE).all()

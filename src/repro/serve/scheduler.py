@@ -1,5 +1,9 @@
 """Pure-policy scheduler for the serving engine (no jax, no device state).
 
+The "no jax" contract is machine-enforced: lint rule RA004
+(``repro.analysis.lint``) fails the build if this module ever imports
+``jax``/``jax.numpy``, with no baseline escape hatch.
+
 The engine is split into two layers:
 
   * **Scheduler** (this module) — *decides*.  Owns the request queues,

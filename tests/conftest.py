@@ -9,6 +9,13 @@ import jax
 import numpy as np
 import pytest
 
+# The Pallas contract checker is ON for the whole suite (every
+# pc.pallas_call launch is validated) unless explicitly disabled with
+# REPRO_KERNEL_CHECK=0.  See repro.analysis.kernel_check.
+if os.environ.get("REPRO_KERNEL_CHECK", "1") != "0":
+    from repro.analysis import kernel_check
+    kernel_check.enable()
+
 
 @pytest.fixture(scope="session")
 def rng():

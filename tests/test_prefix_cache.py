@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import retrace_guard
 from repro.configs.base import get_config, shrink
 from repro.core.famous import FamousConfig
 from repro.models import module, transformer
@@ -149,10 +150,10 @@ def test_warm_hits_token_identical_greedy(impl):
                         cache_kind="paged", page_size=8, prefix_cache=True)
     first = _run(eng, prompts)
     hits_first = eng.prefix_hit_pages
-    warm = _run(eng, prompts, rid0=10)
+    with retrace_guard(eng, label="warm prefix-cache run"):
+        warm = _run(eng, prompts, rid0=10)
     assert cold == first == warm
     assert eng.prefix_hit_pages - hits_first >= 3 * 2  # >= 2 shared pages each
-    assert sum(eng.compilations.values()) <= 3, eng.compilations
     eng.alloc.assert_invariants()
 
 
