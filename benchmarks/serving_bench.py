@@ -46,6 +46,9 @@ PAGE = 16
 CHUNK = 16 if TINY else 32
 MAX_NEW = 4 if TINY else 16
 N_REQ = 6 if TINY else 16
+# the speculation rows decode longer: acceptance comes from the drafter
+# mining the *generated* history's cycles, which max_new=4 never builds
+SPEC_NEW = 16 if TINY else 48
 
 
 def _requests(cfg, n=N_REQ, seed=0):
@@ -152,6 +155,87 @@ def _bench_prefix(params, cfg):
          f"{_pct(cold_ttft, 50):.1f}ms")
 
 
+def _spec_requests(cfg, kind, n=N_REQ, seed=3, rid0=0):
+    """Speculation workloads.  "repetitive": periodic prompts + greedy —
+    the prompt-lookup drafter's best case (the continuation keeps citing
+    the prompt's own n-grams).  "adversarial": uniform-random prompts +
+    temperature-1 sampling — drafts almost never survive, so every step
+    pays the verify width for ~1 accepted token (the worst case the
+    regression bound guards)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        n_p = int(rng.integers(6, min(16, MAX_SEQ - SPEC_NEW)))
+        if kind == "repetitive":
+            motif = list(map(int, rng.integers(0, cfg.vocab_size, 4)))
+            toks, kw = (motif * MAX_SEQ)[:n_p], {}
+        else:
+            toks = list(map(int, rng.integers(0, cfg.vocab_size, n_p)))
+            kw = dict(temperature=1.0, seed=rid0 + i)
+        reqs.append(Request(rid=rid0 + i, tokens=toks, max_new=SPEC_NEW, **kw))
+    return reqs
+
+
+def _bench_spec(params, cfg):
+    """spec_off vs spec_on rows, interleaved best-of-N so scheduler noise
+    and one-off compiles cancel.  Gates: drafts actually get accepted and
+    tok/s wins on the repetitive workload; the adversarial (near-zero
+    acceptance) workload stays within a bounded slowdown of plain decode."""
+    rounds = 2 if TINY else 3
+    engines = {}
+    for label, spec in (("spec_off", False), ("spec_on", True)):
+        eng = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                            n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK,
+                            speculative=spec, draft_k=4)
+        eng.run(_spec_requests(cfg, "repetitive", seed=99, rid0=9000))
+        engines[label] = eng
+    spec_eng = engines["spec_on"]
+    tok_s = {}
+    for wl in ("repetitive", "adversarial"):
+        drafted0, accepted0 = spec_eng.spec_drafted, spec_eng.spec_accepted
+        steps0 = spec_eng.spec_steps
+        best = {"spec_off": 0.0, "spec_on": 0.0}
+        outs = {}
+        for rnd in range(rounds):
+            for label, eng in engines.items():
+                reqs = _spec_requests(cfg, wl, seed=50 + rnd,
+                                      rid0=1000 * rnd)
+                t0 = time.monotonic()
+                done = eng.run(reqs)
+                dt = time.monotonic() - t0
+                assert all(r.error is None for r in done)
+                tok = sum(len(r.out) for r in done)
+                best[label] = max(best[label], tok / dt)
+                outs.setdefault(rnd, {})[label] = \
+                    [r.out for r in sorted(done, key=lambda r: r.rid)]
+            # interleaved rounds double as a parity check
+            assert outs[rnd]["spec_on"] == outs[rnd]["spec_off"], \
+                f"speculative {wl} outputs diverged from plain decode"
+        drafted = spec_eng.spec_drafted - drafted0
+        accepted = spec_eng.spec_accepted - accepted0
+        steps = spec_eng.spec_steps - steps0
+        acc = accepted / max(drafted, 1)
+        per_step = (steps + accepted) / max(steps, 1)
+        for label in ("spec_off", "spec_on"):
+            meta = f"tok_s={best[label]:.1f};rounds={rounds}"
+            if label == "spec_on":
+                meta += (f";acceptance={acc:.3f};"
+                         f"accepted_per_step={per_step:.2f};"
+                         f"drafted={drafted};accepted={accepted}")
+            common.emit(f"serving/{label}_{wl}", 1e6 / max(best[label], 1e-9),
+                        meta)
+        tok_s[wl] = (best["spec_off"], best["spec_on"], acc)
+    off, on, acc = tok_s["repetitive"]
+    assert acc > 0, "repetitive workload must accept draft tokens"
+    assert on > off, \
+        f"speculative tok/s {on:.1f} must beat plain {off:.1f} on the " \
+        f"repetitive workload"
+    off, on, _ = tok_s["adversarial"]
+    assert on > 0.4 * off, \
+        f"adversarial speculative tok/s {on:.1f} fell below 0.4x plain " \
+        f"{off:.1f} — rejected-draft overhead is unbounded"
+
+
 def run():
     print("# serving-level: continuous batching under a mixed long/short "
           "workload (CPU) — monolithic vs chunked prefill, contiguous vs "
@@ -165,6 +249,7 @@ def run():
     _bench(params, cfg, "chunked_paged", prefill_mode="chunked", chunk=CHUNK,
            cache_kind="paged", page_size=PAGE)
     _bench_prefix(params, cfg)
+    _bench_spec(params, cfg)
     if not TINY:
         half = max(2, PagedCacheConfig.default_pool(N_SLOTS, MAX_SEQ,
                                                     PAGE) // 2)

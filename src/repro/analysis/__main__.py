@@ -11,9 +11,10 @@ failed):
    shapes in interpret mode with the contract checker enabled: BlockSpec
    divisibility, index_map arity/bounds, output-grid coverage and the
    VMEM budget are validated against live launches, not just fixtures.
-3. **retrace** — a tiny warmed serving engine must serve a fresh batch
-   under :func:`repro.analysis.retrace_guard.retrace_guard` with zero
-   new compilations (the O(1)-executables invariant from PR 3).
+3. **retrace** — a tiny warmed serving engine — plain *and* speculative
+   (verify executable) — must serve a fresh batch under
+   :func:`repro.analysis.retrace_guard.retrace_guard` with zero new
+   compilations (the O(1)-executables invariant from PR 3).
 
 ``scripts/ci.sh`` runs this before the test suite.
 """
@@ -146,6 +147,21 @@ def run_retrace() -> int:
         return 1
     print(f"retrace: ok — warm engine served a fresh batch with zero new "
           f"compilations (census {engine.compilations})")
+    # speculative engine: the verify executable replaces decode; a warm
+    # engine must serve a fresh mixed workload (varying prompts, so draft
+    # lengths 0..draft_k all occur) with zero new compilations
+    spec = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                         n_slots=2, max_seq=32, chunk=8,
+                         speculative=True, draft_k=3)
+    spec.run(reqs(20))
+    try:
+        with retrace_guard(spec, label="warm speculative decode loop"):
+            spec.run(reqs(30))
+    except RetraceError as e:
+        print(f"retrace: FAIL {e}")
+        return 1
+    print(f"retrace: ok — warm speculative engine served a fresh batch with "
+          f"zero new compilations (census {spec.compilations})")
     return 0
 
 

@@ -63,7 +63,7 @@ RULES = {
 
 # modules (repo-relative under src/repro) contractually free of jax —
 # RA004 admits no baseline entries for these
-PURE_MODULES = ("serve/scheduler.py",)
+PURE_MODULES = ("serve/scheduler.py", "serve/draft.py")
 
 _DEVICE_ROOTS = ("jnp", "jax.numpy", "jax.lax", "jax.random", "jax.nn")
 _SYNC_CALLS = ("int", "float", "np.asarray", "np.array", "numpy.asarray",

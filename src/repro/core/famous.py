@@ -360,6 +360,65 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None,
     return out.astype(q.dtype)
 
 
+def verify_attention(q, k_cache, v_cache, cache_len, *, scale=None,
+                     cfg: FamousConfig = FamousConfig()):
+    """Speculative-verify attention against a contiguous KV cache.
+
+    q: (B, W, H, dh) — the W verify tokens of each slot at absolute
+    positions ``cache_len[b] + j`` (their K/V already written); caches:
+    (B, S_max, KV, dh); cache_len: (B,) int32.  Query j attends keys at
+    positions ``<= cache_len[b] + j`` — W == 1 is exactly
+    :func:`decode_attention`, so a zero-draft slot verifies as a plain
+    decode.  The per-slot offsets are runtime operands: one executable
+    serves every draft-length mix (``W`` is the engine's static
+    ``draft_k + 1`` cap; short drafts ride as masked pad rows).
+
+    impl="pallas" flattens each (slot, verify position) pair into a row of
+    the decode kernel (per-row lengths — see kernels/decode/ops.py);
+    other impls run the dense masked oracle below.
+    """
+    B, W, H, dh = q.shape
+    Smax = k_cache.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    if cfg.impl == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+        return dec_ops.verify_attention(q, k_cache, v_cache, cache_len,
+                                        scale=scale, block_k=cfg.tile_k)
+    k = _broadcast_kv(k_cache, H)
+    v = _broadcast_kv(v_cache, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = cache_len[:, None] + jnp.arange(W)[None, :]         # (B, W)
+    ok = jnp.arange(Smax)[None, None, :] <= q_pos[:, :, None]   # (B, W, Smax)
+    s = jnp.where(ok[:, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_verify_attention(q, k_pages, v_pages, page_table, cache_len, *,
+                           scale=None, cfg: FamousConfig = FamousConfig()):
+    """Speculative-verify attention against a *paged* KV cache.
+
+    q: (B, W, H, dh) at per-slot positions ``cache_len[b] + j``; pools:
+    (n_pages, page_size, KV, dh); page_table: (B, n_p) int32.  impl=
+    "pallas" flattens (slot, verify position) pairs into rows of the
+    scalar-prefetched page-table decode kernel; other impls gather the
+    table into a contiguous view and reuse :func:`verify_attention`.
+    """
+    dh = q.shape[-1]
+    scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    if cfg.impl == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+        return dec_ops.paged_verify_attention(q, k_pages, v_pages,
+                                              page_table, cache_len,
+                                              scale=scale)
+    from repro.kernels.decode.ref import gather_pages
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return verify_attention(q, k, v, cache_len, scale=scale, cfg=cfg)
+
+
 def attention_at_positions(q, k, v, q_pos, k_pos, *, window=0, scale=None):
     """Dense masked attention with *explicit* absolute positions.
 

@@ -54,6 +54,63 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def verify_attention(q, k_cache, v_cache, cache_len, *, scale=None,
+                     block_k=512, interpret=None):
+    """Speculative verify on the decode kernel: q: (B, W, H, dh) at per-slot
+    positions ``cache_len[b] + j`` (K/V already written); caches:
+    (B, Skv, KV, dh); cache_len: (B,) int32.  Returns (B, W, H, dh).
+
+    Each (slot, verify position) pair becomes its own kernel row with
+    length ``cache_len[b] + j + 1`` — the decode kernel already supports
+    per-row lengths, so verify needs no new Pallas code, only this
+    flattening (which broadcasts each slot's cache W ways; acceptable for
+    the small ``W = draft_k + 1`` the engine uses).
+    """
+    B, W, H, dh = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    # (B, W, H, dh) -> (B*W, KV, group, dh) -> (B*W*KV, group, dh)
+    qf = q.reshape(B * W, KV, group, dh).reshape(B * W * KV, group, dh)
+    kf = jnp.broadcast_to(k_cache.transpose(0, 2, 1, 3)[:, None],
+                          (B, W, KV, Skv, dh)).reshape(B * W * KV, Skv, dh)
+    vf = jnp.broadcast_to(v_cache.transpose(0, 2, 1, 3)[:, None],
+                          (B, W, KV, Skv, dh)).reshape(B * W * KV, Skv, dh)
+    # pad rows past a slot's real draft may exceed Skv — clip (their
+    # output is discarded by the engine's accept loop anyway)
+    lens = jnp.minimum(cache_len[:, None] + jnp.arange(W, dtype=jnp.int32)
+                       + 1, Skv)
+    out = decode_attn.decode_attention(qf, kf, vf,
+                                       jnp.repeat(lens.reshape(-1), KV),
+                                       window=0, scale=scale,
+                                       block_k=block_k, interpret=interpret)
+    return out.reshape(B, W, KV, group, dh).reshape(B, W, H, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_verify_attention(q, k_pages, v_pages, page_table, cache_len, *,
+                           scale=None, interpret=None):
+    """Paged speculative verify: q: (B, W, H, dh); pools:
+    (n_pages, page_size, KV, dh); page_table: (B, n_p) int32; cache_len:
+    (B,) int32.  Returns (B, W, H, dh).  Same flattening as
+    :func:`verify_attention`, on the scalar-prefetched page-table kernel —
+    only the page *table* is repeated per verify position (a few ints per
+    row), never the pool itself."""
+    B, W, H, dh = q.shape
+    ps, KV = k_pages.shape[1], k_pages.shape[2]
+    n_p = page_table.shape[1]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    qf = q.reshape(B * W, KV, group, dh)
+    pt = jnp.broadcast_to(page_table[:, None], (B, W, n_p)).reshape(B * W, n_p)
+    lens = jnp.minimum(cache_len[:, None] + jnp.arange(W, dtype=jnp.int32)
+                       + 1, n_p * ps).reshape(-1)
+    out = decode_attn.paged_decode_attention(qf, k_pages, v_pages, pt, lens,
+                                             scale=scale, interpret=interpret)
+    return out.reshape(B, W, H, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
 def chunk_prefill_attention(q, k_cache, v_cache, q_offset, *, scale=None,
                             block_k=512, interpret=None):
     """q: (B, C, H, dh) at positions [q_offset, q_offset+C); caches:

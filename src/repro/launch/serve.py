@@ -61,6 +61,15 @@ def main():
                          "requests via refcounted pages (paged + chunked "
                          "only; recurrent/hybrid archs fall back to cold "
                          "prefill)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-model-free speculative decoding: a host-side "
+                         "prompt-lookup drafter proposes tokens, one batched "
+                         "verify step accepts the longest matching prefix "
+                         "(token-identical to plain decode; recurrent/hybrid "
+                         "archs fall back to plain decode)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max draft tokens per verify step (the verify "
+                         "executable's fixed width is draft-k + 1)")
     args = ap.parse_args()
 
     cfg = shrink(get_config(args.arch))
@@ -76,7 +85,9 @@ def main():
                            prefill_mode=args.prefill_mode,
                            chunk=args.chunk,
                            token_budget=args.token_budget,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           speculative=args.speculative,
+                           draft_k=args.draft_k)
     rng = np.random.default_rng(args.seed)
     # --prefix-cache demo: every request shares a "system prompt" head, the
     # workload prefix caching exists for (otherwise prompts are disjoint)
@@ -97,8 +108,16 @@ def main():
     census = engine.compilations
     print(f"served {len(done)} requests, {tok} tokens in {dt:.2f}s "
           f"({tok/dt:.1f} tok/s), executables: prefill={census['prefill']} "
-          f"decode={census['decode']} clear={census['clear']} "
+          f"decode={census['decode']} verify={census['verify']} "
+          f"clear={census['clear']} "
           f"(mode={args.prefill_mode}, cache={engine.cache_kind})")
+    if args.speculative:
+        print(f"speculative: active={engine.speculative_active}, "
+              f"draft_k={args.draft_k}, "
+              f"{engine.spec_accepted}/{engine.spec_drafted} drafts accepted "
+              f"(rate {engine.acceptance_rate:.2f}), "
+              f"{engine.accepted_per_step:.2f} tokens/verify-step over "
+              f"{engine.spec_steps} steps")
     if engine.paged:
         print(f"page pool: {engine.pcfg.n_pages} pages x "
               f"{engine.pcfg.page_size} tokens, "

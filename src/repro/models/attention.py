@@ -237,6 +237,67 @@ def apply_attn_decode(p: dict, x: jax.Array, cache: dict, cache_len,
     return o, cache
 
 
+def apply_attn_verify(p: dict, x: jax.Array, cache: dict, cache_len,
+                      cfg: ModelConfig, fcfg: famous.FamousConfig):
+    """Speculative verify: W tokens per slot in one forward.  x: (B, W, D)
+    at absolute positions ``cache_len[b] + j``; cache_len: (B,) valid
+    entries BEFORE the first verify token.  Returns (out (B, W, D), cache).
+
+    The W tokens' K/V scatter to their per-slot positions; positions past
+    ``max_seq`` (pad rows of slots near capacity) are dropped, not
+    clamped — a clamped write would corrupt live entries.  Rejected draft
+    positions need no rollback: their K/V stay as junk past the accepted
+    ``cache_len``, masked by every later causal read and overwritten by
+    the next verify/decode writes before they ever become visible.
+    """
+    B, W = x.shape[:2]
+    positions = cache_len[:, None] + jnp.arange(W)      # (B, W)
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    b_idx = jnp.arange(B)[:, None]
+    cache = {
+        "k": cache["k"].at[b_idx, positions].set(
+            k.astype(cache["k"].dtype), mode="drop"),
+        "v": cache["v"].at[b_idx, positions].set(
+            v.astype(cache["v"].dtype), mode="drop"),
+    }
+    out = famous.verify_attention(q, cache["k"], cache["v"], cache_len,
+                                  cfg=fcfg)
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+    return o, cache
+
+
+def apply_attn_verify_paged(p: dict, x: jax.Array, cache: dict, page_table,
+                            cache_len, cfg: ModelConfig,
+                            fcfg: famous.FamousConfig):
+    """Speculative verify against the shared page pool.  x: (B, W, D);
+    cache: {"k","v"} pools (n_pages, page_size, kv, dh); page_table:
+    (B, n_p) int32; cache_len: (B,) valid entries BEFORE the first verify
+    token.  Position p of slot b scatters into page
+    ``page_table[b, p // ps]`` — explicitly redirected to the null page
+    when ``p // ps`` runs past the table (pad rows of a nearly-full slot;
+    a clamped gather would alias a live page and corrupt it).  Rollback of
+    rejected tokens is the allocator's job (``PageAllocator.shrink``
+    returns the tail pages grown for them); the junk K/V they leave in the
+    kept pages is masked/overwritten exactly as in the contiguous case.
+    """
+    B, W = x.shape[:2]
+    positions = cache_len[:, None] + jnp.arange(W)      # (B, W)
+    q, k, v = _project(p, x, cfg, fcfg, positions)
+    ps = cache["k"].shape[1]
+    n_p = page_table.shape[1]
+    blk = positions // ps
+    b_idx = jnp.arange(B)[:, None]
+    pids = jnp.where(blk < n_p,
+                     page_table[b_idx, jnp.minimum(blk, n_p - 1)], 0)
+    offs = positions % ps
+    cache = {"k": cache["k"].at[pids, offs].set(k.astype(cache["k"].dtype)),
+             "v": cache["v"].at[pids, offs].set(v.astype(cache["v"].dtype))}
+    out = famous.paged_verify_attention(q, cache["k"], cache["v"],
+                                        page_table, cache_len, cfg=fcfg)
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
+    return o, cache
+
+
 def apply_attn_decode_paged(p: dict, x: jax.Array, cache: dict, page_table,
                             cache_len, cfg: ModelConfig,
                             fcfg: famous.FamousConfig):

@@ -386,6 +386,71 @@ def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
     return logits_fn(params, x, cfg)[:, 0], new_caches
 
 
+def _apply_block_verify(kind, p, x, cache, cache_len, cfg, fcfg,
+                        page_table=None):
+    n = functools.partial(layers.apply_norm, kind=cfg.norm)
+    if kind != ATTN:
+        # Sliding-window rings write position p at slot p % ring — a verify
+        # batch would destroy the oldest W entries before knowing how many
+        # tokens survive, and recurrent state (RG-LRU, RWKV) cannot be
+        # rolled back to an intermediate position.  The engine must fall
+        # back to plain decode for these stacks (speculative_active False).
+        raise ValueError(
+            f"verify_step only supports global-attention layers, got {kind}")
+    if page_table is not None:
+        a, cache = attention.apply_attn_verify_paged(
+            p["attn"], n(p["ln1"], x), cache, page_table, cache_len, cfg,
+            fcfg)
+    else:
+        a, cache = attention.apply_attn_verify(
+            p["attn"], n(p["ln1"], x), cache, cache_len, cfg, fcfg)
+    x = x + a
+    return x + _apply_ffn(p["ffn"], n(p["ln2"], x), cfg), cache
+
+
+def verify_step(params, tokens, caches, cache_len, cfg: ModelConfig,
+                fcfg: FamousConfig = FamousConfig(), compute_dtype=None,
+                page_table=None):
+    """Speculative verify: decode W tokens per slot in ONE forward.
+
+    tokens: (B, W) int32 — row b is ``[last_token, draft_1..draft_{W-1}]``
+    at absolute positions ``cache_len[b] + j`` (pad rows past a short
+    draft are ignored by the caller); cache_len: (B,) valid cache entries
+    BEFORE the first token, a runtime operand — one executable serves
+    every draft-length mix.  Returns (logits (B, W, vocab), new caches):
+    ``logits[b, j]`` is the next-token distribution after consuming
+    ``tokens[b, :j+1]``, exactly what j+1 sequential ``decode_step`` calls
+    would produce (causal attention makes the parallel and sequential
+    activations identical), so the engine can accept the longest draft
+    prefix the model agrees with and remain token-identical to plain
+    decode.  ``W == 1`` degenerates to ``decode_step`` (without the
+    recurrent/ring support — only all-ATTN stacks verify; see
+    ``_apply_block_verify``).
+    """
+    dtype = compute_dtype or params["final_norm"]["scale"].dtype
+    x = _embed_inputs(params, tokens, cfg, dtype)
+
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern_unit):
+            key = f"pos{i}"
+            x, new_caches[key] = _apply_block_verify(
+                kind, unit_params[key], x, unit_cache[key], cache_len, cfg,
+                fcfg, page_table)
+        return x, new_caches
+
+    x, new_block_caches = jax.lax.scan(
+        unit_body, x, (params["blocks"], caches["blocks"]))
+    new_caches = {"blocks": new_block_caches}
+    for i, kind in enumerate(cfg.tail_layers):
+        x, new_caches[f"tail{i}"] = _apply_block_verify(
+            kind, params[f"tail{i}"], x, caches[f"tail{i}"], cache_len, cfg,
+            fcfg, page_table)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    return logits_fn(params, x, cfg), new_caches
+
+
 # ---------------------------------------------------------------------------
 # serving: chunked prefill (the Scheduler/Runtime hot path)
 # ---------------------------------------------------------------------------

@@ -6,7 +6,12 @@ conclusion: the Runtime owns exactly **two** hot executables —
   * one **fixed-shape chunked-prefill step** (``transformer.prefill_chunk``:
     ``chunk`` tokens of one slot, at a runtime offset, written straight
     into the slot's rows/pages of the batched caches), and
-  * one **decode step** (batch = ``n_slots``, the synthesis-time maximum),
+  * one **decode step** (batch = ``n_slots``, the synthesis-time maximum)
+    — or, with ``speculative=True``, one fixed-width **verify step**
+    (``transformer.verify_step``, width ``draft_k + 1``) that replaces it:
+    a host-side prompt-lookup drafter proposes tokens, the verify forward
+    scores all of them at once, and the engine accepts the longest
+    matching prefix (token-identical to plain decode; see docs/serving.md),
 
 so compilation count is O(1) for *any* prompt-length mix — no pow-2
 prefill-bucket family, no per-length executables for recurrent
@@ -56,6 +61,7 @@ from repro.core.famous import FamousConfig
 from repro.core.flexible import next_pow2
 from repro.models import transformer
 from repro.serve import sampling
+from repro.serve.draft import PromptLookupDrafter
 from repro.serve.paged import (PageAllocator, PagedCacheConfig,
                                PagePoolExhausted, block_hashes)
 from repro.serve.scheduler import (DECODE, FREE, PREFILL, Scheduler,
@@ -99,7 +105,9 @@ class ServingEngine:
                  cache_kind: str = "contiguous", page_size: int = 16,
                  n_pages: Optional[int] = None,
                  prefill_mode: str = "chunked", chunk: int = 32,
-                 token_budget: int = 0, prefix_cache: bool = False):
+                 token_budget: int = 0, prefix_cache: bool = False,
+                 speculative: bool = False, draft_k: int = 4,
+                 drafter=None):
         assert cache_kind in ("contiguous", "paged"), cache_kind
         assert prefill_mode in ("chunked", "monolithic"), prefill_mode
         self.params = params
@@ -117,8 +125,27 @@ class ServingEngine:
             # max_seq) and the wkv6 chunked form needs S % min(64, S) == 0
             assert max_seq % self.chunk == 0, (max_seq, self.chunk)
             assert self.chunk <= 64 or self.chunk % 64 == 0, self.chunk
+        # -- speculative decoding -------------------------------------------
+        # The verify step writes K/V at positions [cache_len, cache_len+W)
+        # and rolls back *by bookkeeping only* — rejected positions hold
+        # junk that is causally masked and overwritten before it is ever
+        # read.  That rollback-for-free argument needs position-addressed
+        # storage: sliding-window rings overwrite their OLDEST entries and
+        # recurrent state cannot rewind, so (like the prefix cache) only
+        # all-global-ATTN stacks run speculatively; other archs fall back
+        # to plain decode explicitly (`speculative_active` False).
+        assert draft_k >= 1, draft_k
+        self.draft_k = draft_k
+        all_attn = all(
+            k == ATTN for k in tuple(cfg.pattern_unit) + tuple(cfg.tail_layers))
+        self.speculative_active = speculative and all_attn
+        self.drafter = drafter if drafter is not None else PromptLookupDrafter()
+        self.spec_steps = 0      # verify steps executed
+        self.spec_drafted = 0    # draft tokens proposed to the verifier
+        self.spec_accepted = 0   # draft tokens accepted (bonus excluded)
         self.sched = Scheduler(n_slots, SchedulerConfig(
-            chunk=self.chunk, token_budget=token_budget))
+            chunk=self.chunk, token_budget=token_budget,
+            decode_width=(draft_k + 1) if self.speculative_active else 1))
         if self.paged:
             assert max_seq % page_size == 0, (max_seq, page_size)
             if n_pages is None:  # drop-in capacity; pass n_pages to oversubscribe
@@ -166,10 +193,18 @@ class ServingEngine:
             transformer.prefill_chunk, cfg=cfg, fcfg=fcfg))
         self._decode = jax.jit(
             functools.partial(transformer.decode_step, cfg=cfg, fcfg=fcfg))
+        # the speculative path REPLACES decode with one fixed-shape verify
+        # executable (batch n_slots, width draft_k+1, per-slot runtime
+        # offsets): a zero-draft slot verifies as a 1-valid-token decode,
+        # so the census stays at three hot executables either way
+        self._verify = jax.jit(
+            functools.partial(transformer.verify_step, cfg=cfg, fcfg=fcfg))
         self._clear = jax.jit(functools.partial(
             transformer.clear_slot, cfg=cfg, paged=self.paged))
         self._sample = jax.jit(sampling.sample_tokens,
                                static_argnames=("k_cap",))
+        self._sample_verify = jax.jit(sampling.verify_tokens,
+                                      static_argnames=("k_cap",))
         # recurrent state cannot absorb junk pad tokens -> the monolithic
         # path prefills those archs at exact length (chunked masks pads)
         self.bucketed = all(k in (ATTN, LOCAL_ATTN) for k in cfg.pattern_unit)
@@ -204,8 +239,20 @@ class ServingEngine:
         return {
             "prefill": self.prefill_compilations,
             "decode": _jit_cache_size(self._decode),
+            "verify": _jit_cache_size(self._verify),
             "clear": _jit_cache_size(self._clear),
         }
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted draft tokens / proposed draft tokens (bonus excluded)."""
+        return self.spec_accepted / max(self.spec_drafted, 1)
+
+    @property
+    def accepted_per_step(self) -> float:
+        """Mean tokens emitted per verify step (1.0 = plain-decode pace)."""
+        return ((self.spec_steps + self.spec_accepted)
+                / max(self.spec_steps, 1))
 
     @property
     def slot_req(self) -> list:
@@ -330,7 +377,8 @@ class ServingEngine:
         self.cache_len[slot] = 0
         self._slot_seq[slot] = None
         self._slot_hashes[slot] = None
-        self.alloc.free(slot)
+        if self.paged:
+            self.alloc.free(slot)
         self._failed.append(req)
 
     def _grow_active(self, active: list) -> list:
@@ -385,24 +433,15 @@ class ServingEngine:
                     self.last_token[ch.slot] = seq[-1]
         # --- decode ----------------------------------------------------------
         active = list(plan.decode_slots)
-        if self.paged and active:
-            active = self._grow_active(active)
-            finished.extend(self._failed)
-            self._failed.clear()
-        if not active:
-            self.sched.tick()
-            return finished
-        act = np.zeros((self.n_slots,), bool)
-        act[active] = True
-        act_dev = jnp.asarray(act)
-        kw = {"page_table": self._page_table()} if self.paged else {}
-        # host numpy slot state is materialized on device here, once per
-        # launch, as plain operands of the (warm) decode executable
-        logits, self.caches = self._decode(self.params,
-                                           jnp.asarray(self.last_token),
-                                           self.caches,
-                                           jnp.asarray(self.cache_len),
-                                           active=act_dev, **kw)
+        if self.speculative_active:
+            self._decode_speculative(active, finished)
+        else:
+            self._decode_plain(active, finished)
+        self.sched.tick()
+        return finished
+
+    def _sampling_operands(self, active):
+        """Per-slot sampling operands (host numpy, materialized once)."""
         temps = np.zeros((self.n_slots,), np.float32)
         topks = np.zeros((self.n_slots,), np.int32)
         seeds = np.zeros((self.n_slots,), np.uint32)
@@ -414,6 +453,48 @@ class ServingEngine:
             # rids/seeds may exceed 2^31 — fold, don't truncate (uint32)
             seeds[i] = sampling.fold_seed(r.rid if r.seed is None else r.seed)
             idxs[i] = len(r.out)
+        return temps, topks, seeds, idxs
+
+    def _maybe_retire(self, i: int, req: Request, now: float,
+                      finished: list) -> None:
+        """Release the slot when the request hit its length limits."""
+        if (len(req.out) >= req.max_new
+                or int(self.cache_len[i]) >= self.max_seq - 1):
+            req.done = True
+            req.t_done = now
+            finished.append(req)
+            self.sched.release(i)
+            self._slot_seq[i] = None
+            self.cache_len[i] = 0
+            if self.paged:
+                if self.prefix_cache_active and self._slot_hashes[i]:
+                    # publish-on-retire: the slot's full prompt blocks
+                    # (now completely written) become index entries; its
+                    # pages drop to refcount 0 in free() below but stay
+                    # warm on the cached-free LRU for future hits
+                    self.alloc.publish(i, self._slot_hashes[i])
+                self._slot_hashes[i] = None
+                self.alloc.free(i)  # refcounts drop; pool or LRU
+
+    def _decode_plain(self, active: list, finished: list) -> None:
+        if self.paged and active:
+            active = self._grow_active(active)
+            finished.extend(self._failed)
+            self._failed.clear()
+        if not active:
+            return
+        act = np.zeros((self.n_slots,), bool)
+        act[active] = True
+        act_dev = jnp.asarray(act)
+        kw = {"page_table": self._page_table()} if self.paged else {}
+        # host numpy slot state is materialized on device here, once per
+        # launch, as plain operands of the (warm) decode executable
+        logits, self.caches = self._decode(self.params,
+                                           jnp.asarray(self.last_token),
+                                           self.caches,
+                                           jnp.asarray(self.cache_len),
+                                           active=act_dev, **kw)
+        temps, topks, seeds, idxs = self._sampling_operands(active)
         if temps.any():
             # k_cap: pow-2 roundup of the largest requested top-k, so the
             # sampler thresholds against a small static top_k instead of a
@@ -435,25 +516,108 @@ class ServingEngine:
             if req.t_first is None:
                 req.t_first = now
             self.sched.on_decode_token(i)
-            if (len(req.out) >= req.max_new
-                    or int(self.cache_len[i]) >= self.max_seq - 1):
-                req.done = True
-                req.t_done = now
-                finished.append(req)
-                self.sched.release(i)
-                self._slot_seq[i] = None
-                self.cache_len[i] = 0
-                if self.paged:
-                    if self.prefix_cache_active and self._slot_hashes[i]:
-                        # publish-on-retire: the slot's full prompt blocks
-                        # (now completely written) become index entries; its
-                        # pages drop to refcount 0 in free() below but stay
-                        # warm on the cached-free LRU for future hits
-                        self.alloc.publish(i, self._slot_hashes[i])
-                    self._slot_hashes[i] = None
-                    self.alloc.free(i)  # refcounts drop; pool or LRU
-        self.sched.tick()
-        return finished
+            self._maybe_retire(i, req, now, finished)
+
+    # -- speculative decode ---------------------------------------------------
+    def _draft_for(self, i: int) -> list:
+        """The slot's draft, capped so a full accept can neither overshoot
+        ``max_new`` nor run ``cache_len`` past the ``max_seq - 1`` retire
+        line.  Drafting is pure host policy over prompt + generated
+        history; its failures are *per-request* (caught by the caller)."""
+        req = self.sched.slots[i].req
+        room = min(self.draft_k,
+                   req.max_new - len(req.out) - 1,
+                   self.max_seq - 2 - int(self.cache_len[i]))
+        if room <= 0:
+            return []
+        seq = list(req.tokens) + list(req.out)
+        return [int(t) for t in self.drafter.draft(seq, room)][:room]
+
+    def _decode_speculative(self, active: list, finished: list) -> None:
+        """One verify step: draft on the host, verify all slots' drafts in
+        ONE fixed-shape forward (width ``draft_k + 1``), accept each
+        slot's longest matching prefix plus the model's bonus/correction
+        token, and roll back the rest by bookkeeping (contiguous: junk
+        K/V past ``cache_len`` is masked/overwritten; paged: tail pages
+        grown for rejected tokens shrink back to the pool)."""
+        W = self.draft_k + 1
+        drafts: dict[int, list] = {}
+        for i in list(active):
+            try:
+                drafts[i] = self._draft_for(i)
+            except Exception as e:   # a poisoned request fails alone
+                self._fail_slot(i, f"drafter failed: {type(e).__name__}: {e}")
+                active.remove(i)
+        if self.paged and active:
+            # baseline growth (next token's page) keeps plain-decode
+            # semantics: preempt youngest-first, fail a lone un-backable
+            # sequence.  Draft pages on top are OPPORTUNISTIC — a draft is
+            # never worth preempting a live sequence for, so on exhaustion
+            # the draft is dropped and the slot verifies as plain decode.
+            active = self._grow_active(active)
+            for i in list(active):
+                d = drafts.get(i, [])
+                if not d:
+                    continue
+                try:
+                    self.alloc.grow(i, int(self.cache_len[i]) + 1 + len(d))
+                except PagePoolExhausted:
+                    drafts[i] = []
+        finished.extend(self._failed)
+        self._failed.clear()
+        if not active:
+            return
+        toks = np.zeros((self.n_slots, W), np.int32)
+        for i in active:
+            toks[i, 0] = self.last_token[i]
+            d = drafts.get(i, [])
+            if d:
+                toks[i, 1:1 + len(d)] = d
+        kw = {"page_table": self._page_table()} if self.paged else {}
+        logits, self.caches = self._verify(self.params, jnp.asarray(toks),
+                                           self.caches,
+                                           jnp.asarray(self.cache_len), **kw)
+        temps, topks, seeds, idxs = self._sampling_operands(active)
+        if temps.any():
+            k_cap = next_pow2(max(int(topks.max()), 1))
+            cand = self._sample_verify(logits, jnp.asarray(temps),
+                                       jnp.asarray(topks), jnp.asarray(seeds),
+                                       jnp.asarray(idxs), k_cap=k_cap)
+        else:
+            cand = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cand = np.asarray(cand)       # (n_slots, W); the ONE host sync
+        now = time.monotonic()
+        self.spec_steps += 1
+        for i in active:
+            req = self.sched.slots[i].req
+            d = drafts.get(i, [])
+            # cand[i, j] is the token sequential decode would emit at
+            # output index idxs[i]+j given the draft prefix d[:j]; draft
+            # token j survives iff it predicted exactly that.  The first
+            # mismatch position contributes the model's own token (the
+            # bonus/correction), so every step emits 1..W tokens and the
+            # stream equals plain decode's token for token.
+            n_acc = 1
+            for j, dt in enumerate(d):
+                if int(cand[i, j]) != dt:
+                    break
+                n_acc += 1
+            emitted = [int(t) for t in cand[i, :n_acc]]
+            self.spec_drafted += len(d)
+            self.spec_accepted += n_acc - 1
+            self.sched.on_draft(i, len(d), n_acc - 1)
+            self.cache_len[i] += n_acc
+            self.last_token[i] = emitted[-1]
+            req.out.extend(emitted)
+            if req.t_first is None:
+                req.t_first = now
+            for _ in range(n_acc):
+                self.sched.on_decode_token(i)
+            if self.paged:
+                # rollback: return the pages grown for rejected draft
+                # tokens (a draft cut at a page boundary must not leak)
+                self.alloc.shrink(i, int(self.cache_len[i]))
+            self._maybe_retire(i, req, now, finished)
 
     # -- admission control ----------------------------------------------------
     def _admissible(self, req: Request) -> bool:

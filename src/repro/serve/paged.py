@@ -235,6 +235,30 @@ class PageAllocator:
         self._n_held[slot] = need
         self.version += 1
 
+    def shrink(self, slot: int, n_tokens: int) -> None:
+        """Speculative rollback: drop the slot's tail pages beyond
+        ``pages_for(n_tokens)``.  The engine grows a slot for its full
+        draft before verifying; pages grown for *rejected* draft tokens
+        come back here (no leak when a draft is cut at a page boundary).
+        Never cuts into the shared prefix, and handles tail pages exactly
+        like :meth:`free` (a just-reclaimed-from-LRU page is unindexed, so
+        live private tails always return to the free list)."""
+        keep = max(self.cfg.pages_for(max(n_tokens, 1)),
+                   int(self._n_shared[slot]))
+        held = int(self._n_held[slot])
+        if held <= keep:
+            return
+        for page in self.page_table[slot, keep:held][::-1].tolist():
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                if page in self._page_hash:
+                    self._lru[page] = None
+                else:
+                    self._free.append(page)
+        self.page_table[slot, keep:held] = NULL_PAGE
+        self._n_held[slot] = keep
+        self.version += 1
+
     def free(self, slot: int) -> None:
         """Retire a slot: drop one reference per held page and zero its
         table row.  Pages reaching refcount 0 return to the free list —

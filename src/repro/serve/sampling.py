@@ -35,6 +35,22 @@ def fold_seed(seed: int) -> int:
     return s
 
 
+def _sample_one(lg, t, k, s, idx, cap):
+    """One token from one logit row — a pure function of (seed, token
+    index, logits), which is what makes speculative verification exact:
+    the verify path samples position ``j`` with the same ``index`` plain
+    decode would have used, so identical logits yield identical tokens."""
+    greedy = jnp.argmax(lg).astype(jnp.int32)
+    # top-k: keep logits >= the k-th largest (k == 0 -> keep all);
+    # the k-th largest comes from a static-size top_k, not a full sort
+    kth = jax.lax.top_k(lg, cap)[0][jnp.clip(k, 1, cap) - 1]
+    masked = jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+    key = jax.random.fold_in(jax.random.PRNGKey(s), idx)
+    g = jax.random.gumbel(key, lg.shape, lg.dtype)
+    sampled = jnp.argmax(masked / jnp.maximum(t, 1e-6) + g)
+    return jnp.where(t > 0, sampled.astype(jnp.int32), greedy)
+
+
 def sample_tokens(logits, temperature, top_k, seed, index, k_cap: int = 0):
     """Sample one token per slot.
 
@@ -48,16 +64,32 @@ def sample_tokens(logits, temperature, top_k, seed, index, k_cap: int = 0):
     """
     v = logits.shape[-1]
     cap = v if k_cap <= 0 else min(k_cap, v)
+    return jax.vmap(
+        lambda lg, t, k, s, idx: _sample_one(lg, t, k, s, idx, cap)
+    )(logits, temperature, top_k, seed, index)
 
-    def one(lg, t, k, s, idx):
-        greedy = jnp.argmax(lg).astype(jnp.int32)
-        # top-k: keep logits >= the k-th largest (k == 0 -> keep all);
-        # the k-th largest comes from a static-size top_k, not a full sort
-        kth = jax.lax.top_k(lg, cap)[0][jnp.clip(k, 1, cap) - 1]
-        masked = jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
-        key = jax.random.fold_in(jax.random.PRNGKey(s), idx)
-        g = jax.random.gumbel(key, lg.shape, lg.dtype)
-        sampled = jnp.argmax(masked / jnp.maximum(t, 1e-6) + g)
-        return jnp.where(t > 0, sampled.astype(jnp.int32), greedy)
 
-    return jax.vmap(one)(logits, temperature, top_k, seed, index)
+def verify_tokens(logits, temperature, top_k, seed, index0, k_cap: int = 0):
+    """Sample all W verify positions of every slot in one executable.
+
+    logits: (B, W, vocab) f32 from ``transformer.verify_step``; position j
+    of slot b samples with token index ``index0[b] + j`` — the index plain
+    decode would reach after accepting j tokens — and the request's own
+    (temperature, top_k, seed), so the returned (B, W) int32 grid holds,
+    at every j, *the* token sequential decoding of the draft prefix would
+    emit.  The engine accepts draft token j+1 iff it equals entry j (and
+    always emits entry ``n_accepted - 1`` as the bonus/correction token):
+    token-identity with plain decode holds for greedy and seeded sampling
+    alike, because :func:`_sample_one` is deterministic in
+    (seed, index, logits).
+    """
+    v = logits.shape[-1]
+    W = logits.shape[1]
+    cap = v if k_cap <= 0 else min(k_cap, v)
+    idx = index0[:, None] + jnp.arange(W, dtype=index0.dtype)
+
+    def row(lg, t, k, s, idxs):
+        return jax.vmap(
+            lambda l, i: _sample_one(l, t, k, s, i, cap))(lg, idxs)
+
+    return jax.vmap(row)(logits, temperature, top_k, seed, idx)

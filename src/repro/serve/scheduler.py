@@ -26,9 +26,12 @@ head-of-line while it prefills monolithically.  At least one chunk is
 always granted when prefill work exists (forward progress even when
 ``token_budget < n_decode + chunk``).
 
-The default budget ``n_slots + chunk`` yields exactly one prefill chunk
-per step while decodes are active, and ``budget // chunk`` chunks per
-step on an otherwise idle engine (fastest possible TTFT).
+The default budget ``n_slots * decode_width + chunk`` yields exactly one
+prefill chunk per step while decodes are active, and ``budget // chunk``
+chunks per step on an otherwise idle engine (fastest possible TTFT).
+``decode_width`` is 1 for plain decode; the speculative engine sets it to
+``draft_k + 1`` so every decoding slot is charged the verify executable's
+true fixed-shape cost.
 """
 from __future__ import annotations
 
@@ -43,7 +46,14 @@ DECODE = "decode"
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     chunk: int = 32        # fixed prefill-chunk shape (the ONE prefill executable)
-    token_budget: int = 0  # per-step token target; 0 -> n_slots + chunk
+    token_budget: int = 0  # per-step token target; 0 -> n_slots*width + chunk
+    # tokens a decoding slot consumes per step.  Plain decode: 1.
+    # Speculative decode: draft_k + 1 — the verify executable is fixed-shape,
+    # so a decoding slot costs its full draft width whether or not the
+    # drafter proposed anything (short drafts ride as pad rows), and the
+    # budget must charge for it or prefill chunks get crowded in under the
+    # true compute cost of the step.
+    decode_width: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +166,14 @@ class Scheduler:
         st["decode_tokens"] = st.get("decode_tokens", 0) + 1
         st.setdefault("first_token_step", self.step_count)
 
+    def on_draft(self, slot: int, drafted: int, accepted: int) -> None:
+        """Speculative accounting: ``drafted`` proposed tokens were
+        verified this step and ``accepted`` of them survived (the bonus
+        token is charged through :meth:`on_decode_token` like any other)."""
+        st = self._stats(self.slots[slot].req)
+        st["drafted_tokens"] = st.get("drafted_tokens", 0) + drafted
+        st["accepted_tokens"] = st.get("accepted_tokens", 0) + accepted
+
     def release(self, slot: int):
         """Retire / fail / preempt: free the slot, return its request."""
         info = self.slots[slot]
@@ -182,8 +200,9 @@ class Scheduler:
         """One step's worth of work under the token budget."""
         decode_slots = [i for i, s in enumerate(self.slots)
                         if s.state == DECODE]
-        budget = self.cfg.token_budget or (len(self.slots) + self.cfg.chunk)
-        left = budget - len(decode_slots)
+        budget = self.cfg.token_budget or (
+            len(self.slots) * self.cfg.decode_width + self.cfg.chunk)
+        left = budget - len(decode_slots) * self.cfg.decode_width
         chunks: list = []
         prefilling = sorted((s.admit_seq, i) for i, s in enumerate(self.slots)
                             if s.state == PREFILL)

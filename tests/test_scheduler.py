@@ -58,6 +58,48 @@ def test_plan_budget_one_chunk_while_decoding():
         == (3, 0, 8)
 
 
+def test_plan_decode_width_charges_verify_cost():
+    """Speculative serving sets decode_width = draft_k + 1: a decoding
+    slot is charged the verify executable's full fixed width, so prefill
+    chunks are granted against the step's TRUE compute — while the
+    default budget widens in lockstep (one chunk per step still fits)."""
+    s = Scheduler(4, SchedulerConfig(chunk=8, decode_width=4))
+    for i in range(3):
+        s.bind(i, _req(i, 2), 2)
+        s.mark_prefilled(i)
+    s.bind(3, _req(3, 65), 65)
+    plan = s.plan()                   # default budget 4*4 + 8 = 24
+    assert plan.decode_slots == [0, 1, 2]
+    assert len(plan.chunks) == 1      # 24 - 3*4 = 12 -> one 8-token chunk
+    # an explicit budget is consumed decode_width per decoding slot:
+    # 24 - 3*4 = 12 leaves one chunk, where width-1 accounting (24 - 3)
+    # would have granted two
+    s2 = Scheduler(4, SchedulerConfig(chunk=8, token_budget=24,
+                                      decode_width=4))
+    for i in range(3):
+        s2.bind(i, _req(i, 2), 2)
+        s2.mark_prefilled(i)
+    s2.bind(3, _req(3, 65), 65)
+    assert len(s2.plan().chunks) == 1
+    s3 = Scheduler(4, SchedulerConfig(chunk=8, token_budget=24))
+    for i in range(3):
+        s3.bind(i, _req(i, 2), 2)
+        s3.mark_prefilled(i)
+    s3.bind(3, _req(3, 65), 65)
+    assert len(s3.plan().chunks) == 2
+
+
+def test_on_draft_accounting_reaches_fairness():
+    s = Scheduler(1, SchedulerConfig(chunk=8))
+    s.bind(0, _req(0, 2), 2)
+    s.mark_prefilled(0)
+    s.on_draft(0, drafted=4, accepted=2)
+    s.on_draft(0, drafted=3, accepted=0)
+    st = s.fairness(0)
+    assert st["drafted_tokens"] == 7
+    assert st["accepted_tokens"] == 2
+
+
 def test_plan_idle_engine_spends_whole_budget_on_prefill():
     s = Scheduler(2, SchedulerConfig(chunk=8, token_budget=32))
     s.bind(0, _req(0, 65), 65)
