@@ -110,6 +110,41 @@ def run():
     common.emit("kernels/decode_paged_pallas_interpret", us,
                 f"page={ps};pages={n_pages}")
 
+    # ---- int8 quantized pool: same decode, in-kernel dequant -------------
+    # The pool shrinks 4x (int8 payload; the per-token-per-head fp32 scale
+    # adds 4/dh) — the rows measure what the dequant costs on top of the
+    # fp paged path at identical geometry.
+    from repro.core import quant as quant_lib
+    kq8, kscale = quant_lib.quantize(kp, axis=-1)
+    vq8, vscale = quant_lib.quantize(vp, axis=-1)
+    kscale, vscale = kscale[..., 0], vscale[..., 0]
+
+    @jax.jit
+    def paged_decode_q8(q, kp, vp, ks, vs, pt, lens):
+        return famous.paged_decode_attention(q, kp, vp, pt, lens,
+                                             k_scale=ks, v_scale=vs,
+                                             cfg=dcfg)
+
+    us = common.timeit(paged_decode_q8, qd, kq8, vq8, kscale, vscale,
+                       ids, lens)
+    fp_bytes = kp.nbytes + vp.nbytes
+    q8_bytes = (kq8.nbytes + vq8.nbytes + kscale.astype(jnp.float32).nbytes
+                + vscale.astype(jnp.float32).nbytes)
+    common.emit("kernels/decode_paged_int8_gather_xla", us,
+                f"page={ps};pages={n_pages};"
+                f"bytes_vs_fp={q8_bytes/fp_bytes:.3f}")
+
+    @jax.jit
+    def paged_decode_q8_pl(q, kp, vp, ks, vs, pt, lens):
+        return famous.paged_decode_attention(q, kp, vp, pt, lens,
+                                             k_scale=ks, v_scale=vs,
+                                             cfg=pcfg)
+
+    us = common.timeit(paged_decode_q8_pl, qd, kq8, vq8, kscale, vscale,
+                       ids, lens, warmup=1, iters=3)
+    common.emit("kernels/decode_paged_int8_pallas_interpret", us,
+                f"page={ps};pages={n_pages}")
+
     lat = analytical.mha_latency(batch=B, seq=SL, heads=H, kv_heads=H,
                                  head_dim=dh, d_model=D)
     for m in lat.modules:

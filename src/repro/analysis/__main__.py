@@ -56,9 +56,11 @@ def run_kernel_check() -> int:
     from repro.analysis import kernel_check
     from repro.kernels.attention.mha import mha_backward, mha_forward
     from repro.kernels.decode.chunk_prefill import (chunk_prefill,
-                                                    paged_chunk_prefill)
-    from repro.kernels.decode.decode_attn import (decode_attention,
-                                                  paged_decode_attention)
+                                                    paged_chunk_prefill,
+                                                    paged_chunk_prefill_int8)
+    from repro.kernels.decode.decode_attn import (
+        decode_attention, paged_decode_attention,
+        paged_decode_attention_int8)
     from repro.kernels.qkv.qkv_proj import matmul_tiled
     from repro.kernels.scan.linear_scan import rglru_scan, wkv6_scan
 
@@ -66,6 +68,12 @@ def run_kernel_check() -> int:
 
     def arr(*shape):
         return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+    def qarr(*shape):
+        return jnp.asarray(rng.integers(-127, 128, shape), jnp.int8)
+
+    def sarr(*shape):
+        return jnp.asarray(rng.uniform(1e-3, 2e-2, shape), jnp.float32)
 
     failures = 0
     with kernel_check.checking(True):
@@ -91,6 +99,12 @@ def run_kernel_check() -> int:
                              arr(2, 1, 2, 8), arr(9, 4, 1, 8),
                              arr(9, 4, 1, 8), pt,
                              jnp.array([5, 9], jnp.int32), interpret=True)))
+        launches.append(("decode/paged_decode_attention_int8",
+                         lambda: paged_decode_attention_int8(
+                             arr(2, 1, 2, 8), qarr(9, 4, 1, 8),
+                             qarr(9, 4, 1, 8), sarr(9, 4, 1), sarr(9, 4, 1),
+                             pt, jnp.array([5, 9], jnp.int32),
+                             interpret=True)))
         launches.append(("decode/chunk_prefill", lambda: chunk_prefill(
             arr(2, 8, 8), arr(2, 16, 8), arr(2, 16, 8), 4, chunk=4,
             block_k=8, interpret=True)))
@@ -99,6 +113,11 @@ def run_kernel_check() -> int:
                              arr(2, 1, 8, 8), arr(9, 4, 1, 8),
                              arr(9, 4, 1, 8), pt, 4, chunk=4,
                              interpret=True)))
+        launches.append(("decode/paged_chunk_prefill_int8",
+                         lambda: paged_chunk_prefill_int8(
+                             arr(2, 1, 8, 8), qarr(9, 4, 1, 8),
+                             qarr(9, 4, 1, 8), sarr(9, 4, 1), sarr(9, 4, 1),
+                             pt, 4, chunk=4, interpret=True)))
         launches.append(("scan/rglru_scan", lambda: rglru_scan(
             arr(2, 8, 8), arr(2, 8, 8), block_r=8, block_s=4,
             interpret=True)))
@@ -162,6 +181,21 @@ def run_retrace() -> int:
         return 1
     print(f"retrace: ok — warm speculative engine served a fresh batch with "
           f"zero new compilations (census {spec.compilations})")
+    # int8 paged engine: quantize-on-write and the scale-pool operands ride
+    # the same executables — kv_dtype is a cache-structure choice, not a
+    # static jit argument, so the census must stay O(1) here too
+    q8 = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                       n_slots=2, max_seq=32, chunk=8,
+                       cache_kind="paged", page_size=8, kv_dtype="int8")
+    q8.run(reqs(40))
+    try:
+        with retrace_guard(q8, label="warm int8 paged decode loop"):
+            q8.run(reqs(50))
+    except RetraceError as e:
+        print(f"retrace: FAIL {e}")
+        return 1
+    print(f"retrace: ok — warm int8 paged engine served a fresh batch with "
+          f"zero new compilations (census {q8.compilations})")
     return 0
 
 

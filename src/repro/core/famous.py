@@ -397,7 +397,8 @@ def verify_attention(q, k_cache, v_cache, cache_len, *, scale=None,
 
 
 def paged_verify_attention(q, k_pages, v_pages, page_table, cache_len, *,
-                           scale=None, cfg: FamousConfig = FamousConfig()):
+                           scale=None, k_scale=None, v_scale=None,
+                           cfg: FamousConfig = FamousConfig()):
     """Speculative-verify attention against a *paged* KV cache.
 
     q: (B, W, H, dh) at per-slot positions ``cache_len[b] + j``; pools:
@@ -405,17 +406,29 @@ def paged_verify_attention(q, k_pages, v_pages, page_table, cache_len, *,
     "pallas" flattens (slot, verify position) pairs into rows of the
     scalar-prefetched page-table decode kernel; other impls gather the
     table into a contiguous view and reuse :func:`verify_attention`.
+
+    With ``k_scale``/``v_scale`` (fp32 (n_pages, page_size, KV) pools) the
+    K/V pools are int8 and dequantized in-kernel (pallas) or via the
+    dequantizing gather (other impls) — the ``kv_dtype="int8"`` path.
     """
     dh = q.shape[-1]
     scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
     if cfg.impl == "pallas":
         from repro.kernels.decode import ops as dec_ops
+        if k_scale is not None:
+            return dec_ops.paged_verify_attention_int8(
+                q, k_pages, v_pages, k_scale, v_scale, page_table,
+                cache_len, scale=scale)
         return dec_ops.paged_verify_attention(q, k_pages, v_pages,
                                               page_table, cache_len,
                                               scale=scale)
-    from repro.kernels.decode.ref import gather_pages
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
+    from repro.kernels.decode.ref import gather_pages, gather_pages_int8
+    if k_scale is not None:
+        k = gather_pages_int8(k_pages, k_scale, page_table)
+        v = gather_pages_int8(v_pages, v_scale, page_table)
+    else:
+        k = gather_pages(k_pages, page_table)
+        v = gather_pages(v_pages, page_table)
     return verify_attention(q, k, v, cache_len, scale=scale, cfg=cfg)
 
 
@@ -479,7 +492,7 @@ def chunked_prefill_attention(q, k_cache, v_cache, q_offset, *, scale=None,
 
 
 def paged_chunked_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
-                                    *, scale=None,
+                                    *, scale=None, k_scale=None, v_scale=None,
                                     cfg: FamousConfig = FamousConfig()):
     """Chunked-prefill attention against a *paged* KV cache.
 
@@ -488,23 +501,33 @@ def paged_chunked_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
     K/V must already be scattered into the slot's pages.  impl="pallas"
     reuses the scalar-prefetched page-table BlockSpec machinery of
     ``paged_decode_attention``; other impls gather the table into a
-    contiguous view and run the dense chunked reference.
+    contiguous view and run the dense chunked reference.  ``k_scale``/
+    ``v_scale`` select the int8-pool path (see paged_verify_attention).
     """
     B, C, H, dh = q.shape
     scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
     if cfg.impl == "pallas":
         from repro.kernels.decode import ops as dec_ops
+        if k_scale is not None:
+            return dec_ops.paged_chunk_prefill_attention_int8(
+                q, k_pages, v_pages, k_scale, v_scale, page_table,
+                q_offset, scale=scale)
         return dec_ops.paged_chunk_prefill_attention(q, k_pages, v_pages,
                                                      page_table, q_offset,
                                                      scale=scale)
-    from repro.kernels.decode.ref import gather_pages
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
+    from repro.kernels.decode.ref import gather_pages, gather_pages_int8
+    if k_scale is not None:
+        k = gather_pages_int8(k_pages, k_scale, page_table)
+        v = gather_pages_int8(v_pages, v_scale, page_table)
+    else:
+        k = gather_pages(k_pages, page_table)
+        v = gather_pages(v_pages, page_table)
     return chunked_prefill_attention(q, k, v, q_offset, scale=scale, cfg=cfg)
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
-                           scale=None, cfg: FamousConfig = FamousConfig()):
+                           scale=None, k_scale=None, v_scale=None,
+                           cfg: FamousConfig = FamousConfig()):
     """One-token attention against a *paged* KV cache.
 
     q: (B, 1, H, dh); pools: (n_pages, page_size, KV, dh) shared by every
@@ -514,18 +537,27 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
     impl="pallas" streams pages directly via a scalar-prefetched page table
     (kernels/decode); other impls gather the table into a contiguous
     per-slot view and reuse the dense decode path — the XLA reference the
-    kernel is validated against.
+    kernel is validated against.  ``k_scale``/``v_scale`` select the int8
+    pool path (see paged_verify_attention).
     """
     B, _, H, dh = q.shape
     scale = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
     if cfg.impl == "pallas":
         from repro.kernels.decode import ops as dec_ops
+        if k_scale is not None:
+            return dec_ops.paged_decode_attention_int8(
+                q, k_pages, v_pages, k_scale, v_scale, page_table,
+                cache_len, scale=scale)
         return dec_ops.paged_decode_attention(q, k_pages, v_pages,
                                               page_table, cache_len,
                                               scale=scale)
-    from repro.kernels.decode.ref import gather_pages
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
+    from repro.kernels.decode.ref import gather_pages, gather_pages_int8
+    if k_scale is not None:
+        k = gather_pages_int8(k_pages, k_scale, page_table)
+        v = gather_pages_int8(v_pages, v_scale, page_table)
+    else:
+        k = gather_pages(k_pages, page_table)
+        v = gather_pages(v_pages, page_table)
     return decode_attention(q, k, v, cache_len, scale=scale, cfg=cfg)
 
 

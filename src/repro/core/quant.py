@@ -34,8 +34,17 @@ def int8_einsum(spec: str, x: jax.Array, w: jax.Array,
 
     Restriction: the contraction must be a single dim that is the last dim of
     ``x`` and the first dim of ``w`` (the shapes FAMOUS uses: activations ×
-    weights).  Accumulation is int32, dequantised with the outer product of
-    scales — exactly the fixed-point→float convert step of the FPGA pipeline.
+    weights).
+
+    Accumulation contract: the int8×int8 dot accumulates in **int32** (never
+    int8 — no wraparound regardless of contraction length), then the int32
+    accumulator is dequantised in **fp32** by the outer product of the two
+    per-channel scales — exactly the fixed-point→float convert step of the
+    FPGA pipeline.  Only the final cast narrows: the result is
+    ``out_dtype`` when given, else ``x.dtype``.  With bf16 inputs the
+    intermediate precision is therefore *higher* than a plain bf16 einsum
+    (int32/fp32 accumulate, one rounding at the end); pass
+    ``out_dtype=jnp.float32`` to keep the full accumulator precision.
     """
     lhs, rest = spec.split(",")
     rhs, out = rest.split("->")
@@ -47,4 +56,4 @@ def int8_einsum(spec: str, x: jax.Array, w: jax.Array,
     # scale broadcast: x scales cover the batch/seq dims of out, w scales the rest
     x_bcast = xs.reshape(xs.shape[:-1] + (1,) * (len(w.shape) - 1))
     out_f = acc.astype(jnp.float32) * x_bcast * ws.reshape((1,) * (len(x.shape) - 1) + w.shape[1:])
-    return out_f.astype(out_dtype or x.dtype)
+    return out_f.astype(x.dtype if out_dtype is None else out_dtype)

@@ -108,6 +108,48 @@ def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
                             / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel_int8(len_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref,
+                              vs_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                              scale: float, page_size: int, n_p: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (group, dh)
+    # dequantize in VMEM: int8 page x per-token fp32 scale -> fp32 tile.
+    # HBM only ever streams the int8 bytes + one scale row per page.
+    ks = ks_ref[0, :, :].astype(jnp.float32)          # (page_size, 1)
+    vs = vs_ref[0, :, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks    # (page_size, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs
+    valid_len = len_ref[b]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (group, ps)
+    pos = ip * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = pos < valid_len
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ip == n_p - 1)
+    def _flush():
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
 def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
                            scale: float | None = None,
                            interpret: bool = False):
@@ -157,6 +199,63 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
         interpret=interpret,
     )(cache_len.astype(jnp.int32), page_table.astype(jnp.int32),
       q, k_pages, v_pages)
+
+
+def paged_decode_attention_int8(q, k_pages, v_pages, k_scale, v_scale,
+                                page_table, cache_len, *,
+                                scale: float | None = None,
+                                interpret: bool = False):
+    """Int8 paged decode attention with in-kernel dequantization.
+
+    q: (B, KV, group, dh) fp; pools: (n_pages, page_size, KV, dh) **int8**;
+    scale pools: (n_pages, page_size, KV) fp32 per-token-per-kv-head scales;
+    page_table: (B, n_p) int32; cache_len: (B,) int32.
+
+    The scale pools ride the same page-table index_map as K/V, so each grid
+    step DMAs one int8 page plus its (page_size, 1) scale column and widens
+    to fp32 only in VMEM — HBM traffic per token drops from 4 B/elem to
+    1 B/elem + 4 B/head (FAMOUS's 8-bit fixed-point operands, paged).
+    """
+    B, KV, group, dh = q.shape
+    n_pages, page_size = k_pages.shape[0], k_pages.shape[1]
+    n_p = page_table.shape[1]
+    assert k_pages.dtype == jnp.int8 and v_pages.dtype == jnp.int8
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    kernel = functools.partial(_paged_decode_kernel_int8, scale=float(scale),
+                               page_size=page_size, n_p=n_p)
+    grid_spec = pc.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # cache_len, page_table
+        grid=(B, KV, n_p),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh),
+                         lambda b, g, ip, lens, pt: (b, g, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, g, ip, lens, pt: (pt[b, ip], 0, g, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, g, ip, lens, pt: (pt[b, ip], 0, g, 0)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda b, g, ip, lens, pt: (pt[b, ip], 0, g)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda b, g, ip, lens, pt: (pt[b, ip], 0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh),
+                               lambda b, g, ip, lens, pt: (b, g, 0, 0)),
+        scratch_shapes=[
+            pc.VMEM((group, dh), jnp.float32),
+            pc.VMEM((group, 1), jnp.float32),
+            pc.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    return pc.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, dh), q.dtype),
+        compiler_params=pc.compiler_params("parallel", "parallel",
+                                           "arbitrary"),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), page_table.astype(jnp.int32),
+      q, k_pages, v_pages, k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32))
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,

@@ -53,6 +53,23 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
     return out.reshape(B, 1, H, dh)
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention_int8(q, k_pages, v_pages, k_scale, v_scale,
+                                page_table, cache_len, *, scale=None,
+                                interpret=None):
+    """Int8 variant of :func:`paged_decode_attention`: pools are int8 with
+    fp32 (n_pages, page_size, KV) scale pools, dequantized in-kernel."""
+    B, _, H, dh = q.shape
+    KV = k_pages.shape[2]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    qf = q[:, 0].reshape(B, KV, group, dh)
+    out = decode_attn.paged_decode_attention_int8(
+        qf, k_pages, v_pages, k_scale, v_scale, page_table, cache_len,
+        scale=scale, interpret=interpret)
+    return out.reshape(B, 1, H, dh)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
 def verify_attention(q, k_cache, v_cache, cache_len, *, scale=None,
                      block_k=512, interpret=None):
@@ -110,6 +127,27 @@ def paged_verify_attention(q, k_pages, v_pages, page_table, cache_len, *,
     return out.reshape(B, W, H, dh)
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_verify_attention_int8(q, k_pages, v_pages, k_scale, v_scale,
+                                page_table, cache_len, *, scale=None,
+                                interpret=None):
+    """Int8 variant of :func:`paged_verify_attention` — same page-table
+    broadcast, riding the int8 paged decode kernel."""
+    B, W, H, dh = q.shape
+    ps, KV = k_pages.shape[1], k_pages.shape[2]
+    n_p = page_table.shape[1]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    qf = q.reshape(B * W, KV, group, dh)
+    pt = jnp.broadcast_to(page_table[:, None], (B, W, n_p)).reshape(B * W, n_p)
+    lens = jnp.minimum(cache_len[:, None] + jnp.arange(W, dtype=jnp.int32)
+                       + 1, n_p * ps).reshape(-1)
+    out = decode_attn.paged_decode_attention_int8(
+        qf, k_pages, v_pages, k_scale, v_scale, pt, lens,
+        scale=scale, interpret=interpret)
+    return out.reshape(B, W, H, dh)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
 def chunk_prefill_attention(q, k_cache, v_cache, q_offset, *, scale=None,
                             block_k=512, interpret=None):
@@ -146,5 +184,23 @@ def paged_chunk_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
     out = chunk_kernels.paged_chunk_prefill(qf, k_pages, v_pages, page_table,
                                             q_offset, chunk=C, scale=scale,
                                             interpret=interpret)
+    return (out.reshape(B, KV, group, C, dh).transpose(0, 3, 1, 2, 4)
+            .reshape(B, C, H, dh))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_chunk_prefill_attention_int8(q, k_pages, v_pages, k_scale, v_scale,
+                                       page_table, q_offset, *, scale=None,
+                                       interpret=None):
+    """Int8 variant of :func:`paged_chunk_prefill_attention`."""
+    B, C, H, dh = q.shape
+    KV = k_pages.shape[2]
+    group = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    qf = (q.reshape(B, C, KV, group, dh).transpose(0, 2, 3, 1, 4)
+          .reshape(B, KV, group * C, dh))
+    out = chunk_kernels.paged_chunk_prefill_int8(
+        qf, k_pages, v_pages, k_scale, v_scale, page_table, q_offset,
+        chunk=C, scale=scale, interpret=interpret)
     return (out.reshape(B, KV, group, C, dh).transpose(0, 3, 1, 2, 4)
             .reshape(B, C, H, dh))

@@ -37,6 +37,19 @@ def gather_pages(pages, page_table):
     return g.reshape(g.shape[0], n_p * ps, *pages.shape[2:])
 
 
+def gather_pages_int8(pages, scale_pool, page_table):
+    """Dequantizing gather for int8 page pools (XLA oracle path).
+
+    pages: (n_pages, page_size, KV, dh) int8; scale_pool: (n_pages,
+    page_size, KV) fp32 per-token-per-kv-head scales; page_table: (B, n_p).
+    Returns fp32 (B, n_p * page_size, KV, dh) — what the Pallas int8
+    kernels compute tile-by-tile in VMEM, materialised whole.
+    """
+    g = gather_pages(pages, page_table).astype(jnp.float32)
+    s = gather_pages(scale_pool[..., None], page_table)
+    return g * s.astype(jnp.float32)
+
+
 def chunk_prefill_reference(q, k_cache, v_cache, q_offset, *,
                             scale: float | None = None):
     """Dense oracle for the chunked-prefill kernels.
@@ -84,3 +97,26 @@ def paged_decode_reference(q, k_pages, v_pages, page_table, cache_len, *,
     lens = jnp.repeat(cache_len, KV)
     out = decode_reference(qf, kf, vf, lens, scale=scale)
     return out.reshape(B, KV, group, dh)
+
+
+def paged_decode_reference_int8(q, k_pages, v_pages, k_scale, v_scale,
+                                page_table, cache_len, *,
+                                scale: float | None = None):
+    """Dequantizing-gather oracle for the int8 paged decode kernel."""
+    k = gather_pages_int8(k_pages, k_scale, page_table)
+    v = gather_pages_int8(v_pages, v_scale, page_table)
+    B, KV, group, dh = q.shape
+    qf = q.reshape(B * KV, group, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, -1, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, -1, dh)
+    out = decode_reference(qf, kf, vf, jnp.repeat(cache_len, KV), scale=scale)
+    return out.reshape(B, KV, group, dh)
+
+
+def paged_chunk_prefill_reference_int8(q, k_pages, v_pages, k_scale, v_scale,
+                                       page_table, q_offset, *,
+                                       scale: float | None = None):
+    """Dequantizing-gather oracle for the int8 paged chunk-prefill kernel."""
+    k = gather_pages_int8(k_pages, k_scale, page_table)
+    v = gather_pages_int8(v_pages, v_scale, page_table)
+    return chunk_prefill_reference(q, k, v, q_offset, scale=scale)

@@ -56,6 +56,13 @@ def main():
                     help="pool pages incl. the null page (paged mode); "
                          "0 = full contiguous-equivalent capacity — pass "
                          "less to oversubscribe")
+    ap.add_argument("--kv-dtype", choices=("fp", "int8"), default="fp",
+                    help="KV-cache element type (paged only): int8 stores "
+                         "quantized pages plus per-token-per-kv-head fp32 "
+                         "scale pools and dequantizes inside the attention "
+                         "kernels — ~3.2x the live-token capacity per byte "
+                         "at dh=16, lossy (bounded logit drift; see "
+                         "docs/serving.md)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share identical full prompt blocks across "
                          "requests via refcounted pages (paged + chunked "
@@ -87,7 +94,16 @@ def main():
                            token_budget=args.token_budget,
                            prefix_cache=args.prefix_cache,
                            speculative=args.speculative,
-                           draft_k=args.draft_k)
+                           draft_k=args.draft_k,
+                           kv_dtype=args.kv_dtype)
+    if engine.paged:
+        cache_bytes = sum(b.size * b.dtype.itemsize for b in
+                          jax.tree_util.tree_leaves(engine.caches))
+        pc = engine.pcfg
+        print(f"kv cache: paged dtype={engine.kv_dtype}, "
+              f"{pc.n_pages} pages x {pc.page_size} tokens "
+              f"({cache_bytes // pc.n_pages} bytes/page incl. scales), "
+              f"live-token capacity={(pc.n_pages - 1) * pc.page_size}")
     rng = np.random.default_rng(args.seed)
     # --prefix-cache demo: every request shares a "system prompt" head, the
     # workload prefix caching exists for (otherwise prompts are disjoint)

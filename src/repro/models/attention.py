@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import famous
+from repro.core import quant as quant_lib
 from repro.models import layers
 from repro.models.module import ParamSpec
 from repro.parallel.incontext import constrain_attn_activations
@@ -57,20 +58,66 @@ ATTN_CACHE_AXES = {"k": ("batch", None, "kv_heads", "head_dim"),
 
 
 def make_paged_attn_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                          dtype) -> dict:
+                          dtype, kv_dtype: str = "fp") -> dict:
     """Shared page pool for a global-attention layer: every sequence's K/V
     live in fixed-size pages addressed through a per-slot page table (no
-    per-slot batch axis here — the pool is the batch)."""
+    per-slot batch axis here — the pool is the batch).
+
+    ``kv_dtype="int8"`` stores the pools as int8 with parallel fp32
+    ``k_scale``/``v_scale`` pools of shape (n_pages, page_size, kv) — one
+    symmetric scale per (token, kv head), written in the same scatter as
+    the page row so scale rows share the page's id/lifetime by
+    construction (alloc/free/shrink/COW all stay in lockstep for free).
+    """
     kv, dh = cfg.num_kv_heads, cfg.head_dim
     shape = (n_pages, page_size, kv, dh)
+    if kv_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+    assert kv_dtype == "fp", kv_dtype
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def paged_attn_cache_shape(cfg: ModelConfig, n_pages: int, page_size: int,
-                           dtype) -> dict:
+                           dtype, kv_dtype: str = "fp") -> dict:
     kv, dh = cfg.num_kv_heads, cfg.head_dim
+    if kv_dtype == "int8":
+        sds = jax.ShapeDtypeStruct((n_pages, page_size, kv, dh), jnp.int8)
+        ssd = jax.ShapeDtypeStruct((n_pages, page_size, kv), jnp.float32)
+        return {"k": sds, "v": sds, "k_scale": ssd, "v_scale": ssd}
+    assert kv_dtype == "fp", kv_dtype
     sds = jax.ShapeDtypeStruct((n_pages, page_size, kv, dh), dtype)
     return {"k": sds, "v": sds}
+
+
+def _kv_quantize(x):
+    """Per-(token, kv-head) symmetric int8 over head_dim: x (..., kv, dh)
+    -> (int8 (..., kv, dh), fp32 scale (..., kv))."""
+    q, s = quant_lib.quantize(x, axis=-1)
+    return q, s[..., 0].astype(jnp.float32)
+
+
+def _paged_write(cache: dict, pids, offs, k, v) -> dict:
+    """Scatter per-token K/V rows into the page pool at (pids, offs) —
+    quantizing at write time when the pool is int8 (``k_scale`` present)."""
+    if "k_scale" in cache:
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        return {"k": cache["k"].at[pids, offs].set(kq),
+                "v": cache["v"].at[pids, offs].set(vq),
+                "k_scale": cache["k_scale"].at[pids, offs].set(ks),
+                "v_scale": cache["v_scale"].at[pids, offs].set(vs)}
+    return {"k": cache["k"].at[pids, offs].set(k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[pids, offs].set(v.astype(cache["v"].dtype))}
+
+
+def _pool_scales(cache: dict) -> dict:
+    """kwargs routing famous.* paged attention onto the int8 kernels."""
+    if "k_scale" in cache:
+        return {"k_scale": cache["k_scale"], "v_scale": cache["v_scale"]}
+    return {}
 
 
 def _project(p, x, cfg: ModelConfig, fcfg: famous.FamousConfig, positions):
@@ -206,12 +253,13 @@ def apply_attn_chunk_paged(p: dict, x: jax.Array, cache: dict, page_table,
     pt_row = page_table[slot]                          # (n_p,)
     pids = pt_row[positions // ps]
     offs = positions % ps
-    ck = cache["k"].at[pids, offs].set(k[0].astype(cache["k"].dtype))
-    cv = cache["v"].at[pids, offs].set(v[0].astype(cache["v"].dtype))
-    out = famous.paged_chunked_prefill_attention(q, ck, cv, pt_row[None],
-                                                 offset, cfg=fcfg)
+    cache = _paged_write(cache, pids, offs, k[0], v[0])
+    out = famous.paged_chunked_prefill_attention(q, cache["k"], cache["v"],
+                                                 pt_row[None], offset,
+                                                 cfg=fcfg,
+                                                 **_pool_scales(cache))
     o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
-    return o, {"k": ck, "v": cv}
+    return o, cache
 
 
 def apply_attn_decode(p: dict, x: jax.Array, cache: dict, cache_len,
@@ -290,10 +338,10 @@ def apply_attn_verify_paged(p: dict, x: jax.Array, cache: dict, page_table,
     pids = jnp.where(blk < n_p,
                      page_table[b_idx, jnp.minimum(blk, n_p - 1)], 0)
     offs = positions % ps
-    cache = {"k": cache["k"].at[pids, offs].set(k.astype(cache["k"].dtype)),
-             "v": cache["v"].at[pids, offs].set(v.astype(cache["v"].dtype))}
+    cache = _paged_write(cache, pids, offs, k, v)
     out = famous.paged_verify_attention(q, cache["k"], cache["v"],
-                                        page_table, cache_len, cfg=fcfg)
+                                        page_table, cache_len, cfg=fcfg,
+                                        **_pool_scales(cache))
     o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
     return o, cache
 
@@ -318,9 +366,9 @@ def apply_attn_decode_paged(p: dict, x: jax.Array, cache: dict, page_table,
     ps = cache["k"].shape[1]
     pids = page_table[jnp.arange(B), cache_len // ps]      # (B,)
     offs = cache_len % ps
-    cache = {"k": cache["k"].at[pids, offs].set(k[:, 0].astype(cache["k"].dtype)),
-             "v": cache["v"].at[pids, offs].set(v[:, 0].astype(cache["v"].dtype))}
+    cache = _paged_write(cache, pids, offs, k[:, 0], v[:, 0])
     out = famous.paged_decode_attention(q, cache["k"], cache["v"],
-                                        page_table, cache_len + 1, cfg=fcfg)
+                                        page_table, cache_len + 1, cfg=fcfg,
+                                        **_pool_scales(cache))
     o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(out.dtype))
     return o, cache

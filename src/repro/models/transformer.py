@@ -172,14 +172,14 @@ def logits_fn(params, x, cfg: ModelConfig):
 
 def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int, dtype,
                  shapes_only: bool = False, cache_kind: str = "contiguous",
-                 page_size: int = 0, n_pages: int = 0):
+                 page_size: int = 0, n_pages: int = 0, kv_dtype: str = "fp"):
     if kind == ATTN and cache_kind == "paged":
         # global-attention layers share a page pool; sliding-window and
         # recurrent layers are already O(window)/O(1) per slot and keep
         # their per-slot buffers even in paged mode.
         fn = (attention.paged_attn_cache_shape if shapes_only
               else attention.make_paged_attn_cache)
-        return fn(cfg, n_pages, page_size, dtype)
+        return fn(cfg, n_pages, page_size, dtype, kv_dtype)
     if kind in (ATTN, LOCAL_ATTN):
         window = cfg.window if kind == LOCAL_ATTN else 0
         fn = attention.attn_cache_shape if shapes_only else attention.make_attn_cache
@@ -204,7 +204,8 @@ def _stack_cache_tree(unit_caches: dict, n: int, shapes_only: bool):
 
 def make_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype,
                 shapes_only: bool = False, *, cache_kind: str = "contiguous",
-                page_size: int = 0, n_pages: int = 0) -> dict:
+                page_size: int = 0, n_pages: int = 0,
+                kv_dtype: str = "fp") -> dict:
     """Build the per-layer decode caches.
 
     cache_kind="contiguous": every attention layer gets a per-slot
@@ -213,19 +214,26 @@ def make_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype,
     ``(n_pages, page_size, kv, dh)`` page pool addressed through the page
     table that ``decode_step`` receives at call time; memory then scales
     with live tokens, not ``batch x max_seq`` (see serve/paged.py).
+    kv_dtype="int8" (paged only) stores those pools as int8 with fp32
+    per-token scale pools riding the same page ids (see
+    attention.make_paged_attn_cache); writes quantize, kernels dequantize
+    in VMEM.
     """
     assert cache_kind in ("contiguous", "paged"), cache_kind
+    assert kv_dtype in ("fp", "int8"), kv_dtype
+    if kv_dtype == "int8":
+        assert cache_kind == "paged", "kv_dtype='int8' requires paged caches"
     if cache_kind == "paged":
         assert page_size > 0 and n_pages > 0, (page_size, n_pages)
     unit = {f"pos{i}": _block_cache(k, cfg, batch, max_seq, dtype, shapes_only,
-                                    cache_kind, page_size, n_pages)
+                                    cache_kind, page_size, n_pages, kv_dtype)
             for i, k in enumerate(cfg.pattern_unit)}
     caches: dict[str, Any] = {
         "blocks": _stack_cache_tree(unit, cfg.num_units, shapes_only)}
     for i, k in enumerate(cfg.tail_layers):
         caches[f"tail{i}"] = _block_cache(k, cfg, batch, max_seq, dtype,
                                           shapes_only, cache_kind, page_size,
-                                          n_pages)
+                                          n_pages, kv_dtype)
     return caches
 
 
@@ -579,6 +587,25 @@ def _scatter_pages(pool, kv_seq, page_ids):
     return pool.at[idx].set(chunks.astype(pool.dtype))
 
 
+def _scatter_paged_kv(dst: dict, src_k, src_v, page_ids) -> dict:
+    """Scatter a slot's contiguous fp K/V stripes into a paged ATTN pool,
+    quantizing at write time when the pool is int8 (scale leaves present).
+    Scale rows scatter with the *same* page_ids as their int8 rows, so the
+    scale pool needs no allocator bookkeeping of its own."""
+    if "k_scale" in dst:
+        from repro.core import quant as quant_lib
+        kq, ks = quant_lib.quantize(src_k, axis=-1)
+        vq, vs = quant_lib.quantize(src_v, axis=-1)
+        scatter_s = lambda pool, s: _scatter_pages(     # noqa: E731
+            pool[..., None], s, page_ids)[..., 0]
+        return {"k": _scatter_pages(dst["k"], kq, page_ids),
+                "v": _scatter_pages(dst["v"], vq, page_ids),
+                "k_scale": scatter_s(dst["k_scale"], ks),
+                "v_scale": scatter_s(dst["v_scale"], vs)}
+    return {n: _scatter_pages(dst[n], s, page_ids)
+            for n, s in (("k", src_k), ("v", src_v))}
+
+
 def write_prefill_to_slot(caches, one, slot, cfg: ModelConfig,
                           page_ids=None) -> dict:
     """Write a single-sequence prefill cache ``one`` (batch=1, contiguous)
@@ -599,17 +626,15 @@ def write_prefill_to_slot(caches, one, slot, cfg: ModelConfig,
         key = f"pos{i}"
         dst, src = caches["blocks"][key], one["blocks"][key]
         if page_ids is not None and kind == ATTN:
-            out["blocks"][key] = {
-                n: _scatter_pages(dst[n], src[n][:, 0], page_ids)
-                for n in ("k", "v")}
+            out["blocks"][key] = _scatter_paged_kv(dst, src["k"][:, 0],
+                                                   src["v"][:, 0], page_ids)
         else:
             out["blocks"][key] = write_tree(dst, src, 1)
     for i, kind in enumerate(cfg.tail_layers):
         key = f"tail{i}"
         if page_ids is not None and kind == ATTN:
-            out[key] = {n: _scatter_pages(caches[key][n], one[key][n][0],
-                                          page_ids)
-                        for n in ("k", "v")}
+            out[key] = _scatter_paged_kv(caches[key], one[key]["k"][0],
+                                         one[key]["v"][0], page_ids)
         else:
             out[key] = write_tree(caches[key], one[key], 0)
     return out

@@ -107,9 +107,12 @@ class ServingEngine:
                  prefill_mode: str = "chunked", chunk: int = 32,
                  token_budget: int = 0, prefix_cache: bool = False,
                  speculative: bool = False, draft_k: int = 4,
-                 drafter=None):
+                 drafter=None, kv_dtype: str = "fp"):
         assert cache_kind in ("contiguous", "paged"), cache_kind
         assert prefill_mode in ("chunked", "monolithic"), prefill_mode
+        assert kv_dtype in ("fp", "int8"), kv_dtype
+        if kv_dtype == "int8":
+            assert cache_kind == "paged", "kv_dtype='int8' requires paged cache"
         self.params = params
         self.cfg = cfg
         self.fcfg = fcfg
@@ -117,6 +120,7 @@ class ServingEngine:
         self.max_seq = max_seq
         self.dtype = dtype
         self.cache_kind = cache_kind
+        self.kv_dtype = kv_dtype
         self.paged = cache_kind == "paged"
         self.chunked = prefill_mode == "chunked"
         self.chunk = min(chunk, max_seq)
@@ -155,7 +159,7 @@ class ServingEngine:
             self.alloc = PageAllocator(self.pcfg, n_slots, max_seq)
             self.caches = transformer.make_caches(
                 cfg, n_slots, max_seq, dtype, cache_kind="paged",
-                page_size=page_size, n_pages=n_pages)
+                page_size=page_size, n_pages=n_pages, kv_dtype=kv_dtype)
         else:
             self.caches = transformer.make_caches(cfg, n_slots, max_seq, dtype)
         # -- prefix cache ---------------------------------------------------

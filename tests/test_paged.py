@@ -118,6 +118,58 @@ def test_paged_chunk_prefill_kernel_matches_reference():
         np.testing.assert_allclose(out, want, atol=1e-5)
 
 
+def _quantized_pools(key, n_pages, ps, KV, dh):
+    """An fp pool plus its symmetric per-token-per-head int8 quantization."""
+    from repro.core import quant as quant_lib
+    pool = jax.random.normal(key, (n_pages, ps, KV, dh), jnp.float32)
+    q, s = quant_lib.quantize(pool, axis=-1)
+    return pool, q, s[..., 0].astype(jnp.float32)
+
+
+def test_paged_int8_decode_kernel_matches_oracle():
+    """Int8 paged decode: Pallas in-kernel dequant vs the XLA
+    dequantizing-gather oracle (tight), and both vs the fp kernel on the
+    pre-quantization pool (lossy but bounded drift)."""
+    B, KV, group, dh = 3, 2, 4, 16
+    ps, n_pages, n_p = 8, 17, 4
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, KV, group, dh), jnp.float32)
+    kf, kq, kscale = _quantized_pools(ks[1], n_pages, ps, KV, dh)
+    vf, vq, vscale = _quantized_pools(ks[2], n_pages, ps, KV, dh)
+    rng = np.random.default_rng(7)
+    pt = jnp.asarray(rng.integers(1, n_pages, size=(B, n_p)), jnp.int32)
+    lens = jnp.asarray([5, 23, 32], jnp.int32)
+    out = decode_attn.paged_decode_attention_int8(q, kq, vq, kscale, vscale,
+                                                  pt, lens, interpret=True)
+    want = dec_ref.paged_decode_reference_int8(q, kq, vq, kscale, vscale,
+                                               pt, lens)
+    np.testing.assert_allclose(out, want, atol=1e-5)
+    fp = decode_attn.paged_decode_attention(q, kf, vf, pt, lens,
+                                            interpret=True)
+    drift = float(jnp.abs(out - fp).max())
+    assert 0 < drift < 0.05, drift
+
+
+def test_paged_int8_chunk_prefill_kernel_matches_oracle():
+    B, C, H, KV, dh = 2, 8, 4, 2, 16
+    ps, n_p = 8, 8
+    n_pages = 1 + B * n_p
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (B, C, H, dh), jnp.float32)
+    _, kq, kscale = _quantized_pools(ks[1], n_pages, ps, KV, dh)
+    _, vq, vscale = _quantized_pools(ks[2], n_pages, ps, KV, dh)
+    rng = np.random.default_rng(8)
+    pt = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages)).reshape(B, n_p), jnp.int32)
+    from repro.kernels.decode import ops as dec_ops
+    for off in (0, 8, 21):
+        out = dec_ops.paged_chunk_prefill_attention_int8(
+            q, kq, vq, kscale, vscale, pt, jnp.int32(off), interpret=True)
+        want = dec_ref.paged_chunk_prefill_reference_int8(
+            q, kq, vq, kscale, vscale, pt, jnp.int32(off))
+        np.testing.assert_allclose(out, want, atol=1e-5)
+
+
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
 def test_paged_matches_contiguous_decode(impl):
     """Scattering a contiguous cache into pages and reading it back through
@@ -185,6 +237,48 @@ def test_paged_engine_pallas_kernel_path():
                              cache_kind="paged", page_size=8,
                              fcfg=FamousConfig(impl="pallas"))
     assert xla == pallas
+
+
+def test_paged_engine_int8_kernel_path_matches_xla():
+    """Both impls read the SAME quantized pages, so int8 pallas vs int8
+    xla is ordinary kernel parity — greedy outputs identical."""
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n)) for n in (5, 12)]
+    xla = _engine_outputs(params, cfg, prompts, 4, n_slots=2, max_seq=32,
+                          cache_kind="paged", page_size=8, kv_dtype="int8")
+    pallas = _engine_outputs(params, cfg, prompts, 4, n_slots=2, max_seq=32,
+                             cache_kind="paged", page_size=8,
+                             kv_dtype="int8",
+                             fcfg=FamousConfig(impl="pallas"))
+    assert xla == pallas
+
+
+def test_kv_int8_requires_paged_cache():
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    with pytest.raises(AssertionError):
+        ServingEngine(params, cfg, FCFG, n_slots=2, max_seq=32,
+                      kv_dtype="int8")          # contiguous cache
+
+
+def test_int8_preemption_keeps_scales_in_lockstep():
+    """Preempt/resume on a tiny int8 pool: scale rows ride the same page
+    ids as their payload, so a preempted-and-resumed request reproduces
+    the un-contended int8 engine's tokens exactly and the drained pool
+    holds no stale scale state."""
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    rng = np.random.default_rng(9)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=7)) for _ in range(2)]
+    base = _engine_outputs(params, cfg, prompts, 8, n_slots=2, max_seq=32,
+                           cache_kind="paged", page_size=4,
+                           kv_dtype="int8")
+    paged = _engine_outputs(params, cfg, prompts, 8, n_slots=2, max_seq=32,
+                            cache_kind="paged", page_size=4, n_pages=6,
+                            kv_dtype="int8")
+    assert base == paged
 
 
 def test_paged_engine_hybrid_arch():

@@ -157,6 +157,41 @@ def test_warm_hits_token_identical_greedy(impl):
     eng.alloc.assert_invariants()
 
 
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_warm_hits_token_identical_greedy_int8(impl):
+    """Int8 pages republish and alias exactly: block hashes cover token
+    ids (not pool bytes), and a warm hit re-reads the very int8 payload +
+    scale rows the cold run wrote — so warm == cold holds token-for-token
+    even though quantization is lossy vs fp.  Scale rows share the
+    payload's page ids, so refcounts/reclaim need no extra bookkeeping
+    (assert_invariants covers both)."""
+    cfg = shrink(get_config("qwen2-7b"))
+    params = _params(cfg)
+    fcfg = FamousConfig(impl=impl)
+    rng = np.random.default_rng(6)
+    shared = list(rng.integers(0, cfg.vocab_size, size=19))
+    prompts = [shared + list(rng.integers(0, cfg.vocab_size, size=k))
+               for k in (1, 5, 13)]
+    cold_eng = ServingEngine(params, cfg, fcfg, n_slots=2, max_seq=64,
+                             cache_kind="paged", page_size=8,
+                             kv_dtype="int8")
+    cold = _run(cold_eng, prompts)
+    eng = ServingEngine(params, cfg, fcfg, n_slots=2, max_seq=64,
+                        cache_kind="paged", page_size=8, prefix_cache=True,
+                        kv_dtype="int8")
+    first = _run(eng, prompts)
+    hits_first = eng.prefix_hit_pages
+    with retrace_guard(eng, label="warm int8 prefix-cache run"):
+        warm = _run(eng, prompts, rid0=10)
+    assert cold == first == warm
+    assert eng.prefix_hit_pages - hits_first >= 3 * 2
+    eng.alloc.assert_invariants()
+    # the quantized caches really are quantized: int8 payload pools live
+    # in the tree (scale pools ride alongside them)
+    assert any(l.dtype == jnp.int8
+               for l in jax.tree_util.tree_leaves(eng.caches))
+
+
 def test_warm_hits_token_identical_seeded_sampling():
     """Seeded sampling is keyed by (seed, token index) only — a warm hit
     must reproduce the cold run's sampled tokens exactly."""

@@ -1,0 +1,65 @@
+"""Direct unit tests for core/quant.py (symmetric int8 machinery).
+
+Previously only covered incidentally through the ``quant="int8"`` FAMOUS
+config; these pin the contracts the quantized KV cache now depends on:
+roundtrip error bound, scale shape/broadcast, and the int8_einsum
+accumulation/out_dtype contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+
+
+def test_quantize_scale_shape_keepdims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 8))
+    for axis, want in [(-1, (3, 5, 1)), (0, (1, 5, 8)), (1, (3, 1, 8))]:
+        q, s = quant.quantize(x, axis=axis)
+        assert q.dtype == jnp.int8
+        assert s.shape == want, (axis, s.shape)
+        # scale broadcasts back against q without reshaping
+        assert quant.dequantize(q, s).shape == x.shape
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 64)) * 3.0
+    q, s = quant.quantize(x, axis=-1)
+    err = jnp.abs(quant.dequantize(q, s) - x)
+    # rounding to the nearest of 255 levels: |err| <= scale/2 per row
+    assert jnp.all(err <= s / 2 + 1e-7)
+    # and q saturates the grid: every row's amax maps to +/-127
+    assert int(jnp.max(jnp.abs(q))) == 127
+
+
+def test_quantize_near_zero_rows_stable():
+    x = jnp.zeros((4, 8), jnp.float32)
+    q, s = quant.quantize(x, axis=-1)
+    assert not np.any(np.isnan(np.asarray(s)))
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_allclose(np.asarray(quant.dequantize(q, s)), 0.0)
+
+
+def test_int8_einsum_matches_fp_einsum():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    got = quant.int8_einsum("bd,df->bf", x, w)
+    want = jnp.einsum("bd,df->bf", x, w)
+    # two int8 grids: relative error a few percent of the output magnitude
+    tol = 0.05 * float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got - want))) < tol
+
+
+@pytest.mark.parametrize("out_dtype", [None, jnp.float32, jnp.bfloat16])
+def test_int8_einsum_out_dtype_contract(out_dtype):
+    """bf16 inputs: accumulate wide, cast once at the end (docstring)."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 32)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 8)).astype(jnp.bfloat16)
+    out = quant.int8_einsum("bd,df->bf", x, w, out_dtype=out_dtype)
+    assert out.dtype == (x.dtype if out_dtype is None else out_dtype)
+    # values agree with the fp32 out_dtype result up to the final rounding
+    wide = quant.int8_einsum("bd,df->bf", x, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(wide), rtol=1e-2, atol=1e-2)

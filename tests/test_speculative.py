@@ -94,12 +94,14 @@ def test_drafter_truncates_at_sequence_end():
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
-@pytest.mark.parametrize("paged", [False, True])
-def test_verify_step_matches_sequential_decode(impl, paged):
+@pytest.mark.parametrize("cache", ["contiguous", "paged", "paged_int8"])
+def test_verify_step_matches_sequential_decode(impl, cache):
     """verify_step's row j must equal the logits of the j+1-th sequential
     decode_step over the same tokens (causality makes the parallel and
     sequential activations identical) — the foundation the engine's
-    accept rule stands on."""
+    accept rule stands on.  The int8 axis holds because BOTH paths write
+    the same quantized values before attending: quantization is lossy vs
+    fp, but deterministic, so verify-vs-sequential stays exact."""
     cfg, params = _cfg_params("qwen2-7b")
     fcfg = FamousConfig(impl=impl)
     rng = np.random.default_rng(0)
@@ -107,10 +109,11 @@ def test_verify_step_matches_sequential_decode(impl, paged):
     W = 4
     ps, n_p = 8, MAX_SEQ // 8
     kw = {}
-    if paged:
-        caches = transformer.make_caches(cfg, 1, MAX_SEQ, jnp.float32,
-                                         cache_kind="paged", page_size=ps,
-                                         n_pages=n_p + 1)
+    if cache.startswith("paged"):
+        caches = transformer.make_caches(
+            cfg, 1, MAX_SEQ, jnp.float32, cache_kind="paged", page_size=ps,
+            n_pages=n_p + 1,
+            kv_dtype="int8" if cache == "paged_int8" else "fp")
         # pages 1..n_p back the single slot (page 0 is the null page)
         kw["page_table"] = jnp.arange(1, n_p + 1, dtype=jnp.int32)[None]
     else:
@@ -172,6 +175,10 @@ def _random_mix(mix_seed):
                              .pages_for(MAX_SEQ) + 1 + int(rng.integers(0, 3)))
         if rng.random() < 0.5:
             kw["prefix_cache"] = True
+        if rng.random() < 0.3:
+            # quantized KV: spec-vs-plain parity must survive lossy caches
+            # (both sides read the same int8 pages)
+            kw["kv_dtype"] = "int8"
     reqs = []
     shared = list(map(int, rng.integers(0, cfg.vocab_size, 11)))
     for i in range(int(rng.integers(3, 7))):
@@ -252,27 +259,34 @@ class PoisonDrafter(PromptLookupDrafter):
         return super().draft(seq, k)
 
 
-def _ref_out(params, cfg, prompt, max_new):
+def _ref_out(params, cfg, prompt, max_new, **kw):
     done, _ = _serve(params, cfg,
-                     [Request(rid=0, tokens=list(prompt), max_new=max_new)])
+                     [Request(rid=0, tokens=list(prompt), max_new=max_new)],
+                     **kw)
     assert done[0].error is None
     return done[0].out
 
 
-def test_rejected_draft_at_page_boundary_frees_pages():
+@pytest.mark.parametrize("kv_dtype", ["fp", "int8"])
+def test_rejected_draft_at_page_boundary_frees_pages(kv_dtype):
     """A draft that grows the slot across a page boundary and is then
     fully rejected must give the boundary page back — held pages track
     ``cache_len`` exactly after every step (no leak), and the pool is
-    clean after retirement."""
+    clean after retirement.  The int8 axis checks the scale rows shrink
+    in lockstep: they share the freed page ids, so a leak would trip
+    ``assert_invariants`` or the held-pages accounting."""
     cfg, params = _cfg_params("qwen2-7b")
     rng = np.random.default_rng(3)
     prompt = list(map(int, rng.integers(0, cfg.vocab_size, 6)))
-    ref = _ref_out(params, cfg, prompt, 12)
+    # the reference comes from a plain engine with the SAME cache dtype:
+    # int8 greedy may lawfully diverge from fp greedy, rejection must not
+    ref = _ref_out(params, cfg, prompt, 12, cache_kind="paged", page_size=4,
+                   kv_dtype=kv_dtype)
     drafter = ScriptedDrafter(len(prompt), ref, cfg.vocab_size, delta=1)
     eng = ServingEngine(params, cfg, FamousConfig(impl="xla"), n_slots=2,
                         max_seq=MAX_SEQ, chunk=CHUNK, cache_kind="paged",
                         page_size=4, speculative=True, draft_k=5,
-                        drafter=drafter)
+                        drafter=drafter, kv_dtype=kv_dtype)
     req = Request(rid=0, tokens=list(prompt), max_new=12)
     eng.sched.enqueue(req)
     eng.add_request(eng.sched.pop_queued())
