@@ -24,6 +24,7 @@ regressions fail CI.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import time
 
@@ -40,6 +41,10 @@ from repro.serve.engine import Request, ServingEngine
 from repro.serve.paged import PagedCacheConfig
 
 TINY = bool(int(os.environ.get("SERVING_BENCH_TINY", "0")))
+# run ONLY the mesh (tp1/tp2/tp4) leg — the ci.sh multi-device stage sets
+# this so the sharded rows run in their own forced-8-device process while
+# the main TINY bench keeps its 1-device view (see tests/conftest.py)
+MESH_ONLY = bool(int(os.environ.get("SERVING_BENCH_MESH_ONLY", "0")))
 N_SLOTS = 4
 MAX_SEQ = 64 if TINY else 256
 PAGE = 16
@@ -433,7 +438,76 @@ def _bench_kv_int8(params, cfg):
                 f"parity_requests={len(outs['fp'])}")
 
 
+def _bench_mesh():
+    """Interleaved ``tp1``/``tp2``/``tp4`` rows on a paged engine over the
+    forced-host-device mesh.  Gates: outputs token-identical across TP,
+    per-device KV bytes exactly 1/TP of unsharded (the bench config's 4 kv
+    heads divide every TP), census O(1) under retrace_guard.  Skips (with a
+    note) when fewer than 4 devices are visible — scripts/ci.sh runs this
+    leg under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    if jax.device_count() < 4:
+        print("# serving/mesh: SKIPPED — needs >= 4 devices (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
+        return
+    from repro.launch.mesh import make_serving_mesh
+    cfg = shrink(get_config("qwen2-7b"), num_heads=8, num_kv_heads=4,
+                 head_dim=8)
+    params = module.init_params(transformer.model_spec(cfg),
+                                jax.random.PRNGKey(0), jnp.float32)
+    tps, rounds = (1, 2, 4), (2 if TINY else 3)
+    engines = {}
+    for tp in tps:
+        eng = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                            n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK,
+                            cache_kind="paged", page_size=PAGE,
+                            mesh=make_serving_mesh(tp=tp) if tp > 1 else None)
+        eng.run(_requests(cfg, seed=99))            # warm the executables
+        engines[tp] = eng
+    best = {tp: 0.0 for tp in tps}
+    ttft = {tp: [] for tp in tps}
+    tpot = {tp: [] for tp in tps}
+    with contextlib.ExitStack() as stack:
+        for tp in tps:
+            stack.enter_context(retrace_guard(engines[tp],
+                                              label=f"tp{tp} timed runs"))
+        for rnd in range(rounds):
+            outs = {}
+            for tp in tps:
+                reqs = _requests(cfg, seed=50 + rnd)
+                t0 = time.monotonic()
+                done = engines[tp].run(reqs)
+                dt = time.monotonic() - t0
+                ok = [r for r in done
+                      if r.error is None and r.t_first is not None]
+                best[tp] = max(best[tp], sum(len(r.out) for r in ok) / dt)
+                ttft[tp] += [(r.t_first - r.t_submit) * 1e3 for r in ok]
+                tpot[tp] += [(r.t_done - r.t_first) / max(len(r.out) - 1, 1)
+                             * 1e3 for r in ok]
+                outs[tp] = [r.out for r in sorted(done, key=lambda r: r.rid)]
+            assert outs[2] == outs[1] and outs[4] == outs[1], \
+                "sharded outputs diverged from the unsharded engine"
+    kvb = {tp: engines[tp].cache_bytes_per_device() for tp in tps}
+    for tp in tps:
+        common.emit(
+            f"serving/tp{tp}", 1e6 / max(best[tp], 1e-9),
+            f"tok_s={best[tp]:.1f};"
+            f"ttft_p50_ms={_pct(ttft[tp], 50):.1f};"
+            f"ttft_p95_ms={_pct(ttft[tp], 95):.1f};"
+            f"tpot_p50_ms={_pct(tpot[tp], 50):.1f};"
+            f"tpot_p95_ms={_pct(tpot[tp], 95):.1f};"
+            f"kv_bytes_per_device={kvb[tp]};rounds={rounds}")
+    assert kvb[2] * 2 == kvb[1] and kvb[4] * 4 == kvb[1], \
+        f"per-device KV bytes must shrink 1/TP, got {kvb}"
+    for tp in tps:
+        c = engines[tp].compilations
+        assert c["prefill"] == 1 and c["decode"] == 1, (tp, c)
+
+
 def run():
+    if MESH_ONLY:
+        print("# serving-level: mesh-sharded (tp1/tp2/tp4) leg only")
+        _bench_mesh()
+        return
     print("# serving-level: continuous batching under a mixed long/short "
           "workload (CPU) — monolithic vs chunked prefill, contiguous vs "
           "paged KV cache, cold vs warm prefix cache; TTFT/TPOT in ms")
@@ -448,6 +522,7 @@ def run():
     _bench_prefix(params, cfg)
     _bench_spec(params, cfg)
     _bench_kv_int8(params, cfg)
+    _bench_mesh()   # prints a skip note on a 1-device host
     if not TINY:
         half = max(2, PagedCacheConfig.default_pool(N_SLOTS, MAX_SEQ,
                                                     PAGE) // 2)

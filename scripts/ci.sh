@@ -44,5 +44,20 @@ echo "== benchmarks/serving_bench.py smoke (tiny config) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" SERVING_BENCH_TINY=1 \
   python benchmarks/serving_bench.py
 
+# --- multi-device: mesh-sharded serving ------------------------------------
+# Fresh processes with 8 forced host devices (the main suite and benches
+# above must keep their 1-device view — tests/conftest.py): the TP parity
+# matrix, the TP=2 retrace gate, and the tp1/tp2/tp4 sharded bench rows
+# (token-identical outputs, per-device KV bytes 1/TP, O(1) census).
+echo "== multi-device (XLA_FLAGS=--xla_force_host_platform_device_count=8) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  python -m pytest -x -q tests/test_mesh_serving.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  python -m repro.analysis --no-lint --no-kernel-check
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+  SERVING_BENCH_TINY=1 SERVING_BENCH_MESH_ONLY=1 \
+  python benchmarks/serving_bench.py
+
 # --- full test suite -------------------------------------------------------
 exec python -m pytest -x -q "$@"

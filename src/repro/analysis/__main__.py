@@ -11,8 +11,9 @@ failed):
    shapes in interpret mode with the contract checker enabled: BlockSpec
    divisibility, index_map arity/bounds, output-grid coverage and the
    VMEM budget are validated against live launches, not just fixtures.
-3. **retrace** — a tiny warmed serving engine — plain *and* speculative
-   (verify executable) — must serve a fresh batch under
+3. **retrace** — tiny warmed serving engines — plain, speculative (verify
+   executable), int8 paged, and (when >= 2 devices are visible) TP=2
+   mesh-sharded — must each serve a fresh batch under
    :func:`repro.analysis.retrace_guard.retrace_guard` with zero new
    compilations (the O(1)-executables invariant from PR 3).
 
@@ -196,6 +197,28 @@ def run_retrace() -> int:
         return 1
     print(f"retrace: ok — warm int8 paged engine served a fresh batch with "
           f"zero new compilations (census {q8.compilations})")
+    # mesh-sharded engine: out_shardings and the device_put placement must
+    # not fork executables — a warm TP=2 engine serves a fresh batch with
+    # zero new compilations too.  Needs >= 2 devices; the ci.sh
+    # `== multi-device ==` stage runs this module under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8.
+    if jax.device_count() >= 2:
+        from repro.launch.mesh import make_serving_mesh
+        tp2 = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                            n_slots=2, max_seq=32, chunk=8,
+                            mesh=make_serving_mesh(tp=2))
+        tp2.run(reqs(60))
+        try:
+            with retrace_guard(tp2, label="warm TP=2 sharded decode loop"):
+                tp2.run(reqs(70))
+        except RetraceError as e:
+            print(f"retrace: FAIL {e}")
+            return 1
+        print(f"retrace: ok — warm TP=2 sharded engine served a fresh batch "
+              f"with zero new compilations (census {tp2.compilations})")
+    else:
+        print("retrace: note — TP=2 sharded pass skipped (1 visible device; "
+              "the ci.sh multi-device stage forces 8)")
     return 0
 
 

@@ -169,6 +169,39 @@ def supported_cells(arch: str) -> list[str]:
     return cells
 
 
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Bundle of (arch, shape, parallelism) for a serving/dry-run launch.
+
+    ``tp`` is tensor parallelism on the "model" mesh axis (attention heads /
+    kv heads / FFN hidden — see ``parallel.sharding.SERVE_TP_RULES``), ``dp``
+    replica groups on "data".  ``tp == dp == 1`` means no mesh at all: the
+    engine runs its unsharded single-device baseline.
+    """
+    arch: str
+    shape: str = "smoke_decode"
+    tp: int = 1
+    dp: int = 1
+
+    def __post_init__(self):
+        assert self.tp >= 1 and self.dp >= 1, (self.tp, self.dp)
+
+    @property
+    def mesh_shape(self) -> tuple[int, int]:
+        return (self.dp, self.tp)
+
+    @property
+    def needs_mesh(self) -> bool:
+        return self.tp > 1 or self.dp > 1
+
+    def make_mesh(self):
+        """Build the (dp, tp) serving mesh, or None when unsharded."""
+        if not self.needs_mesh:
+            return None
+        from repro.launch.mesh import make_serving_mesh
+        return make_serving_mesh(tp=self.tp, dp=self.dp)
+
+
 def shrink(cfg: ModelConfig, **over) -> ModelConfig:
     """Reduced same-family config for CPU smoke tests."""
     unit = cfg.pattern_unit

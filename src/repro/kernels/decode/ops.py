@@ -1,5 +1,15 @@
 """Jitted wrappers for the decode / chunked-prefill attention kernels:
-(B, S, H, dh) model layout to the kernels' GQA-flattened row layouts."""
+(B, S, H, dh) model layout to the kernels' GQA-flattened row layouts.
+
+The contiguous wrappers flatten **kv-major** — row ``kv * B + b``, not
+``b * KV + kv`` — so the merged row dim is a concatenation of contiguous
+per-kv-head blocks.  Under tensor parallelism the caches shard over the
+kv-head dim; kv-major keeps each device's rows a contiguous slab of the
+flattened operand (b-major would interleave shards token-by-token), so
+GSPMD partitions the reshape instead of all-gathering around it.  Row
+order is otherwise irrelevant: rows are independent, and the inverse
+transpose restores the exact (B, S, H, dh) layout, bit for bit.  The
+paged wrappers keep (B, KV, group, dh) unflattened — already shardable."""
 from __future__ import annotations
 
 import functools
@@ -25,15 +35,17 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, scale=None,
     Skv, KV = k_cache.shape[1], k_cache.shape[2]
     group = H // KV
     interpret = _interpret_default() if interpret is None else interpret
-    # (B, 1, H, dh) -> (B, KV, group, dh) -> (B*KV, group, dh)
-    qf = q[:, 0].reshape(B, KV, group, dh).reshape(B * KV, group, dh)
-    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
-    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
-    lens = jnp.repeat(cache_len, KV)
+    # (B, 1, H, dh) -> (B, KV, group, dh) -> kv-major (KV*B, group, dh)
+    qf = (q[:, 0].reshape(B, KV, group, dh).transpose(1, 0, 2, 3)
+          .reshape(KV * B, group, dh))
+    kf = k_cache.transpose(2, 0, 1, 3).reshape(KV * B, Skv, dh)
+    vf = v_cache.transpose(2, 0, 1, 3).reshape(KV * B, Skv, dh)
+    lens = jnp.tile(cache_len, KV)
     out = decode_attn.decode_attention(qf, kf, vf, lens, window=window,
                                        scale=scale, block_k=block_k,
                                        interpret=interpret)
-    return out.reshape(B, KV, group, dh).reshape(B, 1, H, dh)
+    return (out.reshape(KV, B, group, dh).transpose(1, 0, 2, 3)
+            .reshape(B, 1, H, dh))
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -87,21 +99,23 @@ def verify_attention(q, k_cache, v_cache, cache_len, *, scale=None,
     Skv, KV = k_cache.shape[1], k_cache.shape[2]
     group = H // KV
     interpret = _interpret_default() if interpret is None else interpret
-    # (B, W, H, dh) -> (B*W, KV, group, dh) -> (B*W*KV, group, dh)
-    qf = q.reshape(B * W, KV, group, dh).reshape(B * W * KV, group, dh)
-    kf = jnp.broadcast_to(k_cache.transpose(0, 2, 1, 3)[:, None],
-                          (B, W, KV, Skv, dh)).reshape(B * W * KV, Skv, dh)
-    vf = jnp.broadcast_to(v_cache.transpose(0, 2, 1, 3)[:, None],
-                          (B, W, KV, Skv, dh)).reshape(B * W * KV, Skv, dh)
+    # (B, W, H, dh) -> (B, W, KV, group, dh) -> kv-major (KV*B*W, group, dh)
+    qf = (q.reshape(B, W, KV, group, dh).transpose(2, 0, 1, 3, 4)
+          .reshape(KV * B * W, group, dh))
+    kf = jnp.broadcast_to(k_cache.transpose(2, 0, 1, 3)[:, :, None],
+                          (KV, B, W, Skv, dh)).reshape(KV * B * W, Skv, dh)
+    vf = jnp.broadcast_to(v_cache.transpose(2, 0, 1, 3)[:, :, None],
+                          (KV, B, W, Skv, dh)).reshape(KV * B * W, Skv, dh)
     # pad rows past a slot's real draft may exceed Skv — clip (their
     # output is discarded by the engine's accept loop anyway)
     lens = jnp.minimum(cache_len[:, None] + jnp.arange(W, dtype=jnp.int32)
                        + 1, Skv)
     out = decode_attn.decode_attention(qf, kf, vf,
-                                       jnp.repeat(lens.reshape(-1), KV),
+                                       jnp.tile(lens.reshape(-1), KV),
                                        window=0, scale=scale,
                                        block_k=block_k, interpret=interpret)
-    return out.reshape(B, W, KV, group, dh).reshape(B, W, H, dh)
+    return (out.reshape(KV, B, W, group, dh).transpose(1, 2, 0, 3, 4)
+            .reshape(B, W, H, dh))
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -158,15 +172,15 @@ def chunk_prefill_attention(q, k_cache, v_cache, q_offset, *, scale=None,
     Skv, KV = k_cache.shape[1], k_cache.shape[2]
     group = H // KV
     interpret = _interpret_default() if interpret is None else interpret
-    # (B, C, H, dh) -> (B, KV, group, C, dh) -> (B*KV, group*C, dh)
-    qf = (q.reshape(B, C, KV, group, dh).transpose(0, 2, 3, 1, 4)
-          .reshape(B * KV, group * C, dh))
-    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
-    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, dh)
+    # (B, C, H, dh) -> (KV, B, group, C, dh) -> kv-major (KV*B, group*C, dh)
+    qf = (q.reshape(B, C, KV, group, dh).transpose(2, 0, 3, 1, 4)
+          .reshape(KV * B, group * C, dh))
+    kf = k_cache.transpose(2, 0, 1, 3).reshape(KV * B, Skv, dh)
+    vf = v_cache.transpose(2, 0, 1, 3).reshape(KV * B, Skv, dh)
     out = chunk_kernels.chunk_prefill(qf, kf, vf, q_offset, chunk=C,
                                       scale=scale, block_k=block_k,
                                       interpret=interpret)
-    return (out.reshape(B, KV, group, C, dh).transpose(0, 3, 1, 2, 4)
+    return (out.reshape(KV, B, group, C, dh).transpose(1, 3, 0, 2, 4)
             .reshape(B, C, H, dh))
 
 

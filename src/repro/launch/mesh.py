@@ -44,3 +44,18 @@ def make_smoke_mesh(data: int = 1, model: int = 1, pod: int = 0):
     if pod:
         return make_mesh((pod, data, model), ("pod", "data", "model"))
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(tp: int = 1, dp: int = 1):
+    """Inference mesh for ``ServingEngine(mesh=...)``: ``tp``-way tensor
+    parallelism on the "model" axis (attention heads / kv heads / FFN
+    hidden), ``dp`` replica groups on "data".  Requires ``tp * dp`` visible
+    devices — on CPU force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    n = jax.device_count()
+    if tp * dp > n:
+        raise ValueError(
+            f"serving mesh ({dp}, {tp}) needs {tp * dp} devices but only "
+            f"{n} are visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp * dp}")
+    return make_mesh((dp, tp), ("data", "model"))

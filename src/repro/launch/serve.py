@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import get_config, shrink
+from repro.configs.base import RunConfig, get_config, shrink
 from repro.core.famous import FamousConfig
 from repro.models import module, transformer
 from repro.serve.engine import Request, ServingEngine
@@ -77,7 +77,24 @@ def main():
     ap.add_argument("--draft-k", type=int, default=4,
                     help="max draft tokens per verify step (the verify "
                          "executable's fixed width is draft-k + 1)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor parallelism: shard attention heads / kv "
+                         "heads / FFN hidden over a 'model' mesh axis of "
+                         "this size (needs tp visible devices; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count="
+                         "N). 1 = unsharded single-device baseline")
+    ap.add_argument("--mesh-shape", default="",
+                    help="explicit 'data,model' mesh shape, e.g. '1,2' "
+                         "(overrides --tp; the data axis is reserved for "
+                         "engine replicas)")
     args = ap.parse_args()
+
+    if args.mesh_shape:
+        dp, tp = (int(x) for x in args.mesh_shape.split(","))
+    else:
+        dp, tp = 1, args.tp
+    run = RunConfig(arch=args.arch, tp=tp, dp=dp)
+    mesh = run.make_mesh()   # None when tp == dp == 1
 
     cfg = shrink(get_config(args.arch))
     if cfg.is_encoder_only:
@@ -85,6 +102,7 @@ def main():
     params = module.init_params(transformer.model_spec(cfg),
                                 jax.random.PRNGKey(args.seed), jnp.float32)
     engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                           mesh=mesh,
                            n_slots=args.slots, max_seq=args.max_seq,
                            cache_kind=args.cache_kind,
                            page_size=args.page_size,
@@ -96,6 +114,11 @@ def main():
                            speculative=args.speculative,
                            draft_k=args.draft_k,
                            kv_dtype=args.kv_dtype)
+    if mesh is not None:
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} over "
+              f"{mesh.devices.size} of {jax.device_count()} devices; "
+              f"kv/state cache {engine.cache_bytes_per_device()} "
+              f"bytes/device")
     if engine.paged:
         cache_bytes = sum(b.size * b.dtype.itemsize for b in
                           jax.tree_util.tree_leaves(engine.caches))

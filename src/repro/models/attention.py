@@ -56,6 +56,16 @@ def attn_cache_shape(cfg: ModelConfig, batch: int, max_seq: int, window: int,
 ATTN_CACHE_AXES = {"k": ("batch", None, "kv_heads", "head_dim"),
                    "v": ("batch", None, "kv_heads", "head_dim")}
 
+# Paged pools have no slot axis — (n_pages, page_size, kv, dh) — so tensor
+# parallelism shards the kv-head dim; page ids/tables are head-agnostic and
+# the host-side allocator stays single-copy.  int8 pools carry fp32 scale
+# pools (n_pages, page_size, kv) that shard the same way.
+PAGED_ATTN_CACHE_AXES = {"k": (None, None, "kv_heads", "head_dim"),
+                         "v": (None, None, "kv_heads", "head_dim")}
+PAGED_ATTN_CACHE_AXES_INT8 = {**PAGED_ATTN_CACHE_AXES,
+                              "k_scale": (None, None, "kv_heads"),
+                              "v_scale": (None, None, "kv_heads")}
+
 
 def make_paged_attn_cache(cfg: ModelConfig, n_pages: int, page_size: int,
                           dtype, kv_dtype: str = "fp") -> dict:

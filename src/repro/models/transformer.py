@@ -237,8 +237,29 @@ def make_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype,
     return caches
 
 
-def cache_axes(cfg: ModelConfig) -> dict:
+def param_axes(cfg: ModelConfig) -> dict:
+    """Logical-axis tree matching ``init_params(model_spec(cfg), ...)``.
+
+    Every ParamSpec already declares its axes (``stack_specs`` prepends
+    "layers" for the scanned stack), so this is just the spec tree with
+    shapes dropped — the mesh-placement twin of :func:`cache_axes`, used by
+    the serving engine to shard params and caches consistently."""
+    from repro.models import module
+    return module.logical_axes(model_spec(cfg))
+
+
+def cache_axes(cfg: ModelConfig, cache_kind: str = "contiguous",
+               kv_dtype: str = "fp") -> dict:
+    """Logical-axis tree matching ``make_caches(cfg, ..., cache_kind=,
+    kv_dtype=)``: contiguous attention caches expose ("batch", seq,
+    "kv_heads", "head_dim"); paged pools drop the slot axis and (for int8)
+    add the scale-pool leaves, so the tree structure tracks the cache
+    structure exactly."""
     def block_axes(kind):
+        if kind == ATTN and cache_kind == "paged":
+            return (attention.PAGED_ATTN_CACHE_AXES_INT8
+                    if kv_dtype == "int8"
+                    else attention.PAGED_ATTN_CACHE_AXES)
         if kind in (ATTN, LOCAL_ATTN):
             return attention.ATTN_CACHE_AXES
         if kind == RGLRU:

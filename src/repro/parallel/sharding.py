@@ -12,6 +12,7 @@ Rules are a plain list so the §Perf hillclimb can swap them per-arch.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Optional, Sequence
 
 import jax
@@ -48,6 +49,17 @@ DEFAULT_RULES: Rules = {
 # cost of ZeRO outweighs its memory win; a §Perf lever.
 TP_ONLY_RULES: Rules = {**DEFAULT_RULES, "embed": None}
 
+# Serving tensor parallelism (ServingEngine(mesh=...)): attention heads /
+# kv heads / FFN hidden shard over "model"; everything the host bookkeeping
+# loop touches stays replicated — the embedding table and LM head ("vocab"
+# unsharded, so logits come back replicated and sampling / argmax / the
+# one device->host sync per step are unchanged), and no FSDP (weights are
+# read-only at inference; re-gathering them every step would swamp the
+# step time).  The only collectives inside the hot executables are the
+# attention-output and FFN-down all-reduces GSPMD inserts at the two
+# row-parallel matmuls (wo, w_down).
+SERVE_TP_RULES: Rules = {**TP_ONLY_RULES, "vocab": None}
+
 # ZeRO-3 + sequence sharding, no tensor parallelism (§Perf iteration Q7):
 # weights fully sharded over every mesh axis on their "embed" dim and
 # re-gathered per layer; tokens sharded (batch × seq); FFN/attention run with
@@ -73,6 +85,24 @@ def _present(mesh: Mesh, axis) -> Any:
     return axis if axis in mesh.axis_names else None
 
 
+# (logical axis, dim size, resolved mesh axes) combos already warned about:
+# a 64-layer cache tree resolves the same non-divisible kv_heads dim once
+# per leaf, and the engine re-resolves per engine — one warning is enough.
+_REPLICATE_WARNED: set = set()
+
+
+def _warn_replicated(name: str, dim: int, axis, size: int) -> None:
+    key = (name, dim, axis, size)
+    if key in _REPLICATE_WARNED:
+        return
+    _REPLICATE_WARNED.add(key)
+    warnings.warn(
+        f"logical axis {name!r} (dim {dim}) is not divisible by mesh "
+        f"axis {axis!r} ({size}-way); replicating this dim instead of "
+        f"letting XLA reject the sharding at placement time",
+        RuntimeWarning, stacklevel=3)
+
+
 def spec_for_axes(mesh: Mesh, axes: Sequence[Optional[str]],
                   rules: Rules | None = None,
                   shape: Sequence[int] | None = None) -> P:
@@ -80,9 +110,11 @@ def spec_for_axes(mesh: Mesh, axes: Sequence[Optional[str]],
 
     When ``shape`` is given, dims that are not divisible by their mesh-axis
     product fall back gracefully (try shorter prefixes of a tuple rule, then
-    replicate) — pjit in_shardings demand exact divisibility, and several
-    assigned configs have head counts (10/28/56) or vocab (504) that do not
-    divide the 16-way model axis.  The §Perf log tracks what this costs.
+    replicate, with a single :class:`RuntimeWarning` per distinct fallback)
+    — pjit in_shardings demand exact divisibility, and several assigned
+    configs have head counts (10/28/56), kv-head counts (2/6) or vocab
+    (504) that do not divide a 16-way (or even 4-way) model axis.  The
+    §Perf log tracks what this costs.
     """
     rules = rules or DEFAULT_RULES
     parts = []
@@ -115,6 +147,7 @@ def spec_for_axes(mesh: Mesh, axes: Sequence[Optional[str]],
     for i, name in enumerate(axes):
         m = _present(mesh, rules.get(name)) if name else None
         if m is not None and shape is not None:
+            ruled, ruled_size = m, axis_size(m)
             cands = [m]
             if isinstance(m, tuple):  # try shorter prefixes before giving up
                 cands = [m[:k] for k in range(len(m), 0, -1)]
@@ -124,6 +157,8 @@ def spec_for_axes(mesh: Mesh, axes: Sequence[Optional[str]],
                 if shape[i] % axis_size(c) == 0:
                     m = c if not isinstance(c, tuple) or len(c) > 1 else c[0]
                     break
+            if m is None:
+                _warn_replicated(name, shape[i], ruled, ruled_size)
         parts.append(usable(m))
     return P(*parts)
 

@@ -60,6 +60,7 @@ from repro.configs.base import ATTN, LOCAL_ATTN, ModelConfig
 from repro.core.famous import FamousConfig
 from repro.core.flexible import next_pow2
 from repro.models import transformer
+from repro.parallel import sharding as shardlib
 from repro.serve import sampling
 from repro.serve.draft import PromptLookupDrafter
 from repro.serve.paged import (PageAllocator, PagedCacheConfig,
@@ -107,7 +108,18 @@ class ServingEngine:
                  prefill_mode: str = "chunked", chunk: int = 32,
                  token_budget: int = 0, prefix_cache: bool = False,
                  speculative: bool = False, draft_k: int = 4,
-                 drafter=None, kv_dtype: str = "fp"):
+                 drafter=None, kv_dtype: str = "fp",
+                 mesh=None, sharding_rules=None):
+        """``mesh``: optional :class:`jax.sharding.Mesh` (see
+        ``launch.mesh.make_serving_mesh``) — params and caches are placed
+        with NamedShardings (tensor parallelism over attention heads /
+        kv heads / FFN hidden on the "model" axis; ``sharding_rules``
+        overrides :data:`repro.parallel.sharding.SERVE_TP_RULES`) and the
+        hot executables pin their outputs with ``out_shardings`` so caches
+        never migrate between steps.  Logits stay replicated, so sampling
+        and the host bookkeeping loop are untouched.  ``mesh=None`` (the
+        default) is the unsharded single-device baseline, bit-identical to
+        the pre-mesh engine."""
         assert cache_kind in ("contiguous", "paged"), cache_kind
         assert prefill_mode in ("chunked", "monolithic"), prefill_mode
         assert kv_dtype in ("fp", "int8"), kv_dtype
@@ -162,6 +174,31 @@ class ServingEngine:
                 page_size=page_size, n_pages=n_pages, kv_dtype=kv_dtype)
         else:
             self.caches = transformer.make_caches(cfg, n_slots, max_seq, dtype)
+        # -- mesh placement -------------------------------------------------
+        # Params and caches are committed to their NamedShardings once, here;
+        # the executables below pin cache (and logits) outputs with
+        # out_shardings so the placement is a fixed point of every step —
+        # GSPMD inserts the only collectives (attention-output + FFN-down
+        # all-reduces) inside the steps.  Host-side state (allocator, page
+        # tables, cache_len/last_token numpy, scheduler) is device-agnostic:
+        # page ids address whole (page_size, kv, dh) rows whose kv dim is
+        # what actually shards, so one copy serves every device.
+        self.mesh = mesh
+        self._jit_kw_caches: dict = {}   # jits returning caches only
+        self._jit_kw_logits: dict = {}   # jits returning (logits, caches)
+        if mesh is not None:
+            rules = sharding_rules or shardlib.SERVE_TP_RULES
+            self.params = jax.device_put(
+                self.params,
+                shardlib.tree_shardings(mesh, transformer.param_axes(cfg),
+                                        rules, self.params))
+            cshard = shardlib.tree_shardings(
+                mesh, transformer.cache_axes(cfg, cache_kind, kv_dtype),
+                rules, self.caches)
+            self.caches = jax.device_put(self.caches, cshard)
+            repl = shardlib.replicated(mesh)
+            self._jit_kw_caches = {"out_shardings": cshard}
+            self._jit_kw_logits = {"out_shardings": (repl, cshard)}
         # -- prefix cache ---------------------------------------------------
         # Aliasing cached prompt blocks requires (a) paged storage, (b) a
         # chunked prefill that can start at the first uncached token, and
@@ -194,17 +231,21 @@ class ServingEngine:
         # -- the executables ----------------------------------------------
         self._prefill_exec: dict[int, callable] = {}    # monolithic only
         self._prefill_chunk_exec = jax.jit(functools.partial(
-            transformer.prefill_chunk, cfg=cfg, fcfg=fcfg))
+            transformer.prefill_chunk, cfg=cfg, fcfg=fcfg),
+            **self._jit_kw_caches)
         self._decode = jax.jit(
-            functools.partial(transformer.decode_step, cfg=cfg, fcfg=fcfg))
+            functools.partial(transformer.decode_step, cfg=cfg, fcfg=fcfg),
+            **self._jit_kw_logits)
         # the speculative path REPLACES decode with one fixed-shape verify
         # executable (batch n_slots, width draft_k+1, per-slot runtime
         # offsets): a zero-draft slot verifies as a 1-valid-token decode,
         # so the census stays at three hot executables either way
         self._verify = jax.jit(
-            functools.partial(transformer.verify_step, cfg=cfg, fcfg=fcfg))
+            functools.partial(transformer.verify_step, cfg=cfg, fcfg=fcfg),
+            **self._jit_kw_logits)
         self._clear = jax.jit(functools.partial(
-            transformer.clear_slot, cfg=cfg, paged=self.paged))
+            transformer.clear_slot, cfg=cfg, paged=self.paged),
+            **self._jit_kw_caches)
         self._sample = jax.jit(sampling.sample_tokens,
                                static_argnames=("k_cap",))
         self._sample_verify = jax.jit(sampling.verify_tokens,
@@ -226,7 +267,7 @@ class ServingEngine:
                     caches, one, slot, self.cfg,
                     page_ids=page_ids if self.paged else None)
 
-            self._prefill_exec[length] = jax.jit(fn)
+            self._prefill_exec[length] = jax.jit(fn, **self._jit_kw_caches)
         return self._prefill_exec[length]
 
     @property
@@ -246,6 +287,17 @@ class ServingEngine:
             "verify": _jit_cache_size(self._verify),
             "clear": _jit_cache_size(self._clear),
         }
+
+    def cache_bytes_per_device(self) -> int:
+        """KV/state cache bytes resident on EACH device.  Under a TP mesh
+        the kv-head (or FFN-hidden) dims are sharded, so this shrinks to
+        ~1/TP of the unsharded total — the memory headroom TP buys for
+        bigger models / more pages per device."""
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self.caches):
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            total += int(np.prod(shard)) * leaf.dtype.itemsize
+        return total
 
     @property
     def acceptance_rate(self) -> float:

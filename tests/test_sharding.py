@@ -1,8 +1,11 @@
 """Sharding-rule resolution: divisibility fallbacks, axis dedup, dp prefix
 shrinking, tree mapping.  Uses AbstractMesh so 16-way axes can be tested on
 a 1-device host (spec resolution only reads names/sizes)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import abstract_mesh, make_mesh
@@ -67,6 +70,47 @@ def test_tree_shardings_with_shapes():
     out = shd.tree_shardings(mesh, axes_tree, None, shapes)
     assert out["w"].spec == P("data", "model")
     assert out["b"].spec == P("model")
+
+
+MESH4 = abstract_mesh((1, 4), ("data", "model"))
+
+
+def test_replicate_fallback_warns_once():
+    """A non-divisible ruled dim replicates with ONE RuntimeWarning per
+    distinct (axis, dim, mesh-axes) combo — not one per tree leaf."""
+    shd._REPLICATE_WARNED.clear()
+    with pytest.warns(RuntimeWarning, match="kv_heads.*not divisible"):
+        # 6 kv heads on a 4-way model axis (the deepseek-ish shape from
+        # the issue): replicated, not an XLA placement error
+        spec = shd.spec_for_axes(MESH4, (None, None, "kv_heads", "head_dim"),
+                                 shape=(2, 32, 6, 16))
+    assert spec == P(None, None, None, None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # a repeat would now raise
+        spec = shd.spec_for_axes(MESH4, (None, None, "kv_heads", "head_dim"),
+                                 shape=(2, 32, 6, 16))
+    assert spec == P(None, None, None, None)
+
+
+def test_divisible_path_does_not_warn():
+    shd._REPLICATE_WARNED.clear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        spec = shd.spec_for_axes(MESH4, (None, None, "kv_heads", "head_dim"),
+                                 shape=(2, 32, 8, 16))
+    assert spec == P(None, None, "model", None)
+
+
+def test_serve_tp_rules():
+    """Serving TP: heads/kv_heads/mlp shard over "model"; vocab and embed
+    replicate so logits (and the LM head) come back replicated."""
+    rules = shd.SERVE_TP_RULES
+    assert shd.spec_for_axes(MESH4, ("embed", "heads", "head_dim"),
+                             rules, (64, 8, 16)) == P(None, "model", None)
+    assert shd.spec_for_axes(MESH4, ("embed", "vocab"),
+                             rules, (64, 256)) == P(None, None)
+    assert shd.spec_for_axes(MESH4, ("embed", "mlp"),
+                             rules, (64, 128)) == P(None, "model")
 
 
 def test_dp_helpers():
