@@ -6,8 +6,6 @@ the generated tokens are identical every way (docs/serving.md).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,15 +13,16 @@ import numpy as np
 from repro.configs.base import get_config, shrink
 from repro.core.famous import FamousConfig
 from repro.models import module, transformer
+from repro.obs.trace import now
 from repro.serve.engine import Request, ServingEngine
 
 
 def serve(params, cfg, reqs, label, engine=None, **kw):
     engine = engine or ServingEngine(params, cfg, FamousConfig(impl="xla"),
                                      n_slots=4, max_seq=256, **kw)
-    t0 = time.monotonic()
+    t0 = now()
     done = sorted(engine.run(reqs), key=lambda r: r.rid)
-    dt = time.monotonic() - t0
+    dt = now() - t0
     tok = sum(len(r.out) for r in done)
     print(f"{label:22s}: {len(done)} requests, {tok} new tokens, "
           f"{dt:.2f}s ({tok/dt:.1f} tok/s on 1 CPU core), "

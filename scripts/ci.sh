@@ -44,6 +44,37 @@ echo "== benchmarks/serving_bench.py smoke (tiny config) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" SERVING_BENCH_TINY=1 \
   python benchmarks/serving_bench.py
 
+# --- observability: launcher smoke with metrics + tracing ------------------
+# Serve a small batch with the Observer attached, then validate both
+# export formats: the Chrome trace must hold >0 balanced events with
+# slot/rid attribution, and the Prometheus exposition must pass the
+# format checker (docs/observability.md).  The tok/s overhead gate lives
+# in the serving bench's obs_off/obs_on rows above.
+echo "== observability =="
+OBS_TMP=$(mktemp -d)
+python -m repro.launch.serve --arch qwen2-7b --requests 4 --slots 2 \
+  --max-new 4 --cache-kind paged --prefix-cache \
+  --metrics-out "$OBS_TMP/metrics.prom" --trace-out "$OBS_TMP/trace.json"
+python - "$OBS_TMP" <<'EOF'
+import json, sys
+from repro.obs.metrics import validate_prometheus_text
+tmp = sys.argv[1]
+doc = json.load(open(f"{tmp}/trace.json"))
+evs = doc["traceEvents"]
+assert evs, "trace must record events"
+depth = 0
+for e in evs:
+    assert {"name", "ph", "ts", "pid", "tid"} <= set(e), e
+    depth += {"B": 1, "E": -1}.get(e["ph"], 0)
+    assert depth >= 0, "unbalanced trace"
+assert depth == 0, "unclosed phase spans"
+assert any(e["ph"] == "B" for e in evs), "no phase spans recorded"
+n = validate_prometheus_text(open(f"{tmp}/metrics.prom").read())
+assert n > 100, f"suspiciously small exposition ({n} samples)"
+print(f"observability ok: {len(evs)} trace events, {n} exposition samples")
+EOF
+rm -rf "$OBS_TMP"
+
 # --- multi-device: mesh-sharded serving ------------------------------------
 # Fresh processes with 8 forced host devices (the main suite and benches
 # above must keep their 1-device view — tests/conftest.py): the TP parity

@@ -25,8 +25,9 @@ discipline into a rule:
     parameters (default value or annotation) — values jit would either
     fail on or silently retrace per distinct value.
 ``RA004 impure-scheduler``
-    any ``jax``/``jaxlib`` import in a module declared pure-policy
-    (``serve/scheduler.py``).  Zero allowlist entries by design.
+    any ``jax``/``jaxlib`` import in a module declared host-pure
+    (``PURE_MODULES``: the scheduler, the drafter, and the ``obs/``
+    observability stack).  Zero allowlist entries by design.
 
 Device taint is a deliberately simple per-function analysis: expressions
 rooted at ``jnp.*`` / ``jax.numpy`` / ``jax.lax`` / ``jax.random`` are
@@ -62,8 +63,10 @@ RULES = {
 }
 
 # modules (repo-relative under src/repro) contractually free of jax —
-# RA004 admits no baseline entries for these
-PURE_MODULES = ("serve/scheduler.py", "serve/draft.py")
+# RA004 admits no baseline entries for these.  The obs/ modules are here
+# so observability can never introduce a device sync (docs/observability.md).
+PURE_MODULES = ("serve/scheduler.py", "serve/draft.py",
+                "obs/metrics.py", "obs/trace.py", "obs/runtime.py")
 
 _DEVICE_ROOTS = ("jnp", "jax.numpy", "jax.lax", "jax.random", "jax.nn")
 _SYNC_CALLS = ("int", "float", "np.asarray", "np.array", "numpy.asarray",

@@ -8,7 +8,6 @@ production shapes.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +16,8 @@ import numpy as np
 from repro.configs.base import RunConfig, get_config, shrink
 from repro.core.famous import FamousConfig
 from repro.models import module, transformer
+from repro.obs.runtime import Observer
+from repro.obs.trace import now
 from repro.serve.engine import Request, ServingEngine
 
 
@@ -87,6 +88,17 @@ def main():
                     help="explicit 'data,model' mesh shape, e.g. '1,2' "
                          "(overrides --tp; the data axis is reserved for "
                          "engine replicas)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach an Observer and print the Prometheus text "
+                         "exposition after the run (host-pure counters/"
+                         "gauges/histograms; see docs/observability.md)")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="also write the exposition to PATH (implies "
+                         "--metrics)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="record per-step-phase trace events and write "
+                         "Chrome/Perfetto trace_event JSON to PATH "
+                         "(implies --metrics)")
     args = ap.parse_args()
 
     if args.mesh_shape:
@@ -99,10 +111,12 @@ def main():
     cfg = shrink(get_config(args.arch))
     if cfg.is_encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    obs = (Observer(trace=bool(args.trace_out))
+           if args.metrics or args.metrics_out or args.trace_out else None)
     params = module.init_params(transformer.model_spec(cfg),
                                 jax.random.PRNGKey(args.seed), jnp.float32)
     engine = ServingEngine(params, cfg, FamousConfig(impl="xla"),
-                           mesh=mesh,
+                           mesh=mesh, observer=obs,
                            n_slots=args.slots, max_seq=args.max_seq,
                            cache_kind=args.cache_kind,
                            page_size=args.page_size,
@@ -140,9 +154,9 @@ def main():
                     temperature=args.temperature, top_k=args.top_k,
                     seed=args.seed + i)
             for i in range(args.requests)]
-    t0 = time.monotonic()
+    t0 = now()
     done = engine.run(reqs)
-    dt = time.monotonic() - t0
+    dt = now() - t0
     tok = sum(len(r.out) for r in done)
     census = engine.compilations
     print(f"served {len(done)} requests, {tok} tokens in {dt:.2f}s "
@@ -172,6 +186,19 @@ def main():
         print(f"  req {r.rid}: prompt[:6]={r.tokens[:6]} -> out={r.out} "
               f"(ttft={ttft:.0f}ms, prefill_toks={f.get('prefill_tokens', 0)},"
               f" preemptions={f.get('preemptions', 0)})")
+    if obs is not None:
+        if args.trace_out:
+            obs.write_trace(args.trace_out)
+            print(f"trace: {len(obs.tracer.events)} events "
+                  f"({obs.tracer.dropped} dropped) -> {args.trace_out}")
+        text = obs.prometheus_text()
+        if args.metrics_out:
+            with open(args.metrics_out, "w", encoding="utf-8") as fh:
+                fh.write(text)
+            print(f"metrics: exposition -> {args.metrics_out}")
+        if args.metrics:
+            print("== metrics (prometheus text exposition) ==")
+            print(text, end="")
 
 
 if __name__ == "__main__":

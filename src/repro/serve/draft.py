@@ -27,6 +27,8 @@ batch.
 """
 from __future__ import annotations
 
+from repro.obs.runtime import NULL_OBSERVER
+
 
 class PromptLookupDrafter:
     """Propose the continuation of the most recent earlier occurrence of
@@ -38,15 +40,24 @@ class PromptLookupDrafter:
     ``min(draft_k, tokens the request may still emit)``.
     """
 
-    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1,
+                 observer=None):
         assert 1 <= min_ngram <= max_ngram, (min_ngram, max_ngram)
         self.max_ngram = max_ngram
         self.min_ngram = min_ngram
+        # observability seam (repro.obs.runtime — jax-free, so the RA004
+        # purity contract holds transitively): lookup hit rate + volume
+        self.obs = observer if observer is not None else NULL_OBSERVER
 
     def draft(self, seq, k: int) -> list:
         """Up to ``k`` proposed continuation tokens of ``seq`` (prompt +
         generated history, most recent last); ``[]`` when nothing matches.
         """
+        out = self._lookup(seq, k)
+        self.obs.on_draft_lookup(bool(out), len(out))
+        return out
+
+    def _lookup(self, seq, k: int) -> list:
         n_seq = len(seq)
         if k <= 0 or n_seq < self.min_ngram + 1:
             return []

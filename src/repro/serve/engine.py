@@ -44,12 +44,17 @@ maps cached blocks straight into the page table and prefill starts at the
 first uncached token; retirement publishes the request's prompt blocks
 onto the cached-free LRU.  Architectures with per-slot recurrent or ring
 state fall back to cold prefill (``prefix_cache_active`` False).
+
+Observability is one injectable seam: pass
+``observer=repro.obs.Observer(...)`` and every layer — engine step
+phases, scheduler queues, page allocator, drafter — reports into its
+metrics registry and (optionally) its Perfetto tracer, host-side only
+and token-identical to the un-observed engine (docs/observability.md).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Optional
 
 import jax
@@ -60,6 +65,8 @@ from repro.configs.base import ATTN, LOCAL_ATTN, ModelConfig
 from repro.core.famous import FamousConfig
 from repro.core.flexible import next_pow2
 from repro.models import transformer
+from repro.obs.runtime import NULL_OBSERVER
+from repro.obs.trace import now as _clock
 from repro.parallel import sharding as shardlib
 from repro.serve import sampling
 from repro.serve.draft import PromptLookupDrafter
@@ -85,7 +92,9 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None  # set when the page pool can never back it
-    # wall-clock marks for TTFT/TPOT accounting (set by the engine)
+    # wall-clock marks for TTFT/TPOT accounting, set by the engine from the
+    # single monotonic clock source (repro.obs.trace.now — the repo's one
+    # time.perf_counter call site, shared with trace timestamps)
     t_submit: Optional[float] = None
     t_first: Optional[float] = None
     t_done: Optional[float] = None
@@ -109,8 +118,18 @@ class ServingEngine:
                  token_budget: int = 0, prefix_cache: bool = False,
                  speculative: bool = False, draft_k: int = 4,
                  drafter=None, kv_dtype: str = "fp",
-                 mesh=None, sharding_rules=None):
-        """``mesh``: optional :class:`jax.sharding.Mesh` (see
+                 mesh=None, sharding_rules=None, observer=None):
+        """``observer``: optional :class:`repro.obs.runtime.Observer` —
+        the one injectable seam every layer (engine, scheduler, page
+        allocator, drafter) reports to: TTFT/TPOT histograms, queue
+        depth, pool utilisation, prefix/speculation counters, the
+        executable census, and (when built with ``trace=True``) per-step
+        Perfetto trace events.  ``None`` resolves to the no-op
+        :data:`~repro.obs.runtime.NULL_OBSERVER`; an enabled observer
+        keeps serving token-identical and adds zero device syncs (all
+        hooks take host ints — see docs/observability.md).
+
+        ``mesh``: optional :class:`jax.sharding.Mesh` (see
         ``launch.mesh.make_serving_mesh``) — params and caches are placed
         with NamedShardings (tensor parallelism over attention heads /
         kv heads / FFN hidden on the "model" axis; ``sharding_rules``
@@ -123,6 +142,7 @@ class ServingEngine:
         assert cache_kind in ("contiguous", "paged"), cache_kind
         assert prefill_mode in ("chunked", "monolithic"), prefill_mode
         assert kv_dtype in ("fp", "int8"), kv_dtype
+        self.obs = observer if observer is not None else NULL_OBSERVER
         if kv_dtype == "int8":
             assert cache_kind == "paged", "kv_dtype='int8' requires paged cache"
         self.params = params
@@ -155,20 +175,23 @@ class ServingEngine:
         all_attn = all(
             k == ATTN for k in tuple(cfg.pattern_unit) + tuple(cfg.tail_layers))
         self.speculative_active = speculative and all_attn
-        self.drafter = drafter if drafter is not None else PromptLookupDrafter()
+        self.drafter = drafter if drafter is not None else \
+            PromptLookupDrafter(observer=self.obs)
         self.spec_steps = 0      # verify steps executed
         self.spec_drafted = 0    # draft tokens proposed to the verifier
         self.spec_accepted = 0   # draft tokens accepted (bonus excluded)
         self.sched = Scheduler(n_slots, SchedulerConfig(
             chunk=self.chunk, token_budget=token_budget,
-            decode_width=(draft_k + 1) if self.speculative_active else 1))
+            decode_width=(draft_k + 1) if self.speculative_active else 1),
+            observer=self.obs)
         if self.paged:
             assert max_seq % page_size == 0, (max_seq, page_size)
             if n_pages is None:  # drop-in capacity; pass n_pages to oversubscribe
                 n_pages = PagedCacheConfig.default_pool(n_slots, max_seq,
                                                         page_size)
             self.pcfg = PagedCacheConfig(page_size=page_size, n_pages=n_pages)
-            self.alloc = PageAllocator(self.pcfg, n_slots, max_seq)
+            self.alloc = PageAllocator(self.pcfg, n_slots, max_seq,
+                                       observer=self.obs)
             self.caches = transformer.make_caches(
                 cfg, n_slots, max_seq, dtype, cache_kind="paged",
                 page_size=page_size, n_pages=n_pages, kv_dtype=kv_dtype)
@@ -253,6 +276,11 @@ class ServingEngine:
         # recurrent state cannot absorb junk pad tokens -> the monolithic
         # path prefills those archs at exact length (chunked masks pads)
         self.bucketed = all(k in (ATTN, LOCAL_ATTN) for k in cfg.pattern_unit)
+        # the observer pulls the executable census through this source on
+        # every snapshot/exposition, so repro_engine_compilations{exec=...}
+        # and `engine.compilations` can never disagree (and retrace_guard
+        # accepts either as its census subject)
+        self.obs.register_census(lambda: self.compilations)
 
     # -- compiled helpers ---------------------------------------------------
     def _prefill_fn(self, length: int):
@@ -370,6 +398,8 @@ class ServingEngine:
                 hashes, cap = self._prefix_hashes(req, n)
                 hits = self.alloc.lookup(hashes[:cap])
                 self.prefix_lookups += 1
+                self.obs.on_prefix_lookup(req.rid, len(hits),
+                                          len(hits) * self.pcfg.page_size)
                 if hits:
                     self.alloc.map_prefix(slot, hits)
                     n_cached = len(hits) * self.pcfg.page_size
@@ -385,7 +415,7 @@ class ServingEngine:
         state = self.sched.bind(slot, req, n, cached=n_cached)
         self._slot_seq[slot] = seq
         if req.t_submit is None:
-            req.t_submit = time.monotonic()
+            req.t_submit = _clock()
         if not self.chunked and state == PREFILL:
             m = n - 1
             plen = min(next_pow2(m), self.max_seq) if self.bucketed else m
@@ -429,12 +459,13 @@ class ServingEngine:
     def _fail_slot(self, slot: int, err: str) -> None:
         req = self.sched.release(slot)
         req.error, req.done = err, True
-        req.t_done = time.monotonic()
+        req.t_done = _clock()
         self.cache_len[slot] = 0
         self._slot_seq[slot] = None
         self._slot_hashes[slot] = None
         if self.paged:
             self.alloc.free(slot)
+        self.obs.on_retire(req, slot)
         self._failed.append(req)
 
     def _grow_active(self, active: list) -> list:
@@ -469,6 +500,9 @@ class ServingEngine:
         batched decode across the decoding slots.  Returns the requests
         that finished (or, paged mode, failed) this step."""
         finished = []
+        self.obs.on_step(
+            queue_depth=len(self.sched.resume) + len(self.sched.pending),
+            occupied=len(self.sched.occupied()))
         plan = self.sched.plan()
         # --- prefill chunks (fixed shape; one executable) -------------------
         if plan.chunks:
@@ -478,10 +512,13 @@ class ServingEngine:
                 toks = np.zeros((1, self.chunk), np.int32)
                 toks[0, :ch.n] = seq[ch.start:ch.start + ch.n]
                 kw = {"page_table": pt} if self.paged else {}
-                self.caches = self._prefill_chunk_exec(
-                    self.params, jnp.asarray(toks), self.caches,
-                    jnp.int32(ch.slot), jnp.int32(ch.start), jnp.int32(ch.n),
-                    **kw)
+                with self.obs.phase("prefill_chunk", slot=ch.slot,
+                                    rid=self.sched.slots[ch.slot].req.rid,
+                                    start=ch.start, n=ch.n):
+                    self.caches = self._prefill_chunk_exec(
+                        self.params, jnp.asarray(toks), self.caches,
+                        jnp.int32(ch.slot), jnp.int32(ch.start),
+                        jnp.int32(ch.n), **kw)
                 self.cache_len[ch.slot] = ch.start + ch.n
                 if self.sched.on_chunk(ch.slot, ch.n):
                     # prefill complete: decode restarts at the last token,
@@ -518,6 +555,7 @@ class ServingEngine:
                 or int(self.cache_len[i]) >= self.max_seq - 1):
             req.done = True
             req.t_done = now
+            self.obs.on_retire(req, i)
             finished.append(req)
             self.sched.release(i)
             self._slot_seq[i] = None
@@ -544,28 +582,33 @@ class ServingEngine:
         act_dev = jnp.asarray(act)
         kw = {"page_table": self._page_table()} if self.paged else {}
         # host numpy slot state is materialized on device here, once per
-        # launch, as plain operands of the (warm) decode executable
-        logits, self.caches = self._decode(self.params,
-                                           jnp.asarray(self.last_token),
-                                           self.caches,
-                                           jnp.asarray(self.cache_len),
-                                           active=act_dev, **kw)
-        temps, topks, seeds, idxs = self._sampling_operands(active)
-        if temps.any():
-            # k_cap: pow-2 roundup of the largest requested top-k, so the
-            # sampler thresholds against a small static top_k instead of a
-            # full-vocab sort (<= O(log V) executables ever compile)
-            k_cap = next_pow2(max(int(topks.max()), 1))
-            next_tok = self._sample(logits, jnp.asarray(temps),
-                                    jnp.asarray(topks), jnp.asarray(seeds),
-                                    jnp.asarray(idxs), k_cap=k_cap)
-        else:  # all-greedy step (the default): skip the sampler's
-            # top-k threshold + Gumbel draw on the hot path
-            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        toks = np.asarray(next_tok)   # the step's ONE device->host sync
+        # launch, as plain operands of the (warm) decode executable.  The
+        # observer phase wraps dispatch AND the step's one device->host
+        # sync, so the span is the true host-observed decode latency.
+        with self.obs.phase("decode", slots=len(active)):
+            logits, self.caches = self._decode(self.params,
+                                               jnp.asarray(self.last_token),
+                                               self.caches,
+                                               jnp.asarray(self.cache_len),
+                                               active=act_dev, **kw)
+            temps, topks, seeds, idxs = self._sampling_operands(active)
+            if temps.any():
+                # k_cap: pow-2 roundup of the largest requested top-k, so
+                # the sampler thresholds against a small static top_k
+                # instead of a full-vocab sort (<= O(log V) executables)
+                k_cap = next_pow2(max(int(topks.max()), 1))
+                next_tok = self._sample(logits, jnp.asarray(temps),
+                                        jnp.asarray(topks),
+                                        jnp.asarray(seeds),
+                                        jnp.asarray(idxs), k_cap=k_cap)
+            else:  # all-greedy step (the default): skip the sampler's
+                # top-k threshold + Gumbel draw on the hot path
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks = np.asarray(next_tok)   # the step's ONE device->host sync
         self.cache_len[act] += 1
         self.last_token[act] = toks[act]
-        now = time.monotonic()
+        self.obs.on_tokens(len(active))
+        now = _clock()
         for i in active:
             req = self.sched.slots[i].req
             req.out.append(int(toks[i]))
@@ -630,20 +673,26 @@ class ServingEngine:
             if d:
                 toks[i, 1:1 + len(d)] = d
         kw = {"page_table": self._page_table()} if self.paged else {}
-        logits, self.caches = self._verify(self.params, jnp.asarray(toks),
-                                           self.caches,
-                                           jnp.asarray(self.cache_len), **kw)
-        temps, topks, seeds, idxs = self._sampling_operands(active)
-        if temps.any():
-            k_cap = next_pow2(max(int(topks.max()), 1))
-            cand = self._sample_verify(logits, jnp.asarray(temps),
-                                       jnp.asarray(topks), jnp.asarray(seeds),
-                                       jnp.asarray(idxs), k_cap=k_cap)
-        else:
-            cand = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        cand = np.asarray(cand)       # (n_slots, W); the ONE host sync
-        now = time.monotonic()
+        with self.obs.phase("verify", slots=len(active),
+                            drafted=sum(len(d) for d in drafts.values())):
+            logits, self.caches = self._verify(self.params,
+                                               jnp.asarray(toks),
+                                               self.caches,
+                                               jnp.asarray(self.cache_len),
+                                               **kw)
+            temps, topks, seeds, idxs = self._sampling_operands(active)
+            if temps.any():
+                k_cap = next_pow2(max(int(topks.max()), 1))
+                cand = self._sample_verify(logits, jnp.asarray(temps),
+                                           jnp.asarray(topks),
+                                           jnp.asarray(seeds),
+                                           jnp.asarray(idxs), k_cap=k_cap)
+            else:
+                cand = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cand = np.asarray(cand)       # (n_slots, W); the ONE host sync
+        now = _clock()
         self.spec_steps += 1
+        self.obs.on_spec_step()
         for i in active:
             req = self.sched.slots[i].req
             d = drafts.get(i, [])
@@ -661,6 +710,8 @@ class ServingEngine:
             emitted = [int(t) for t in cand[i, :n_acc]]
             self.spec_drafted += len(d)
             self.spec_accepted += n_acc - 1
+            self.obs.on_draft_verified(req.rid, len(d), n_acc - 1)
+            self.obs.on_tokens(n_acc)
             self.sched.on_draft(i, len(d), n_acc - 1)
             self.cache_len[i] += n_acc
             self.last_token[i] = emitted[-1]
@@ -707,7 +758,7 @@ class ServingEngine:
         ``max_steps`` returns *every* request: unfinished ones (still in a
         slot, preempted, or never admitted) come back with ``req.error``
         set, ``done=False`` and whatever ``req.out`` they produced."""
-        now = time.monotonic()
+        now = _clock()
         for req in requests:
             if req.t_submit is None:
                 req.t_submit = now
@@ -723,7 +774,8 @@ class ServingEngine:
                 except PagePoolExhausted as e:
                     req = self.sched.pop_queued()
                     req.error, req.done = str(e), True
-                    req.t_done = time.monotonic()
+                    req.t_done = _clock()
+                    self.obs.on_retire(req)
                     done.append(req)
                     continue
                 self.add_request(self.sched.pop_queued())
@@ -753,8 +805,9 @@ class ServingEngine:
                 f"never admitted within max_steps={max_steps}")
             done.append(req)
         self.sched.pending = []
-        now = time.monotonic()
+        now = _clock()
         for req in done:
             if req.error is not None and req.t_done is None:
                 req.t_done = now   # terminal requests carry a completion mark
+                self.obs.on_retire(req)
         return done

@@ -61,6 +61,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.obs.runtime import NULL_OBSERVER
+
 NULL_PAGE = 0
 
 
@@ -109,9 +111,13 @@ class PageAllocator:
     """Refcounting free-list allocator over page ids ``1..n_pages-1``
     (0 is null), with a prefix-cache index over published pages."""
 
-    def __init__(self, cfg: PagedCacheConfig, n_slots: int, max_seq: int):
+    def __init__(self, cfg: PagedCacheConfig, n_slots: int, max_seq: int,
+                 observer=None):
         assert cfg.n_pages >= 2, "pool needs the null page plus one real page"
         self.cfg = cfg
+        # observability seam (repro.obs.runtime): page-op counters, pool
+        # gauges, trace instants.  Host-pure — hooks take plain ints.
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self.n_slots = n_slots
         self.pages_per_slot = cfg.pages_per_slot(max_seq)
         self._free = list(range(cfg.n_pages - 1, 0, -1))  # pop() -> low ids
@@ -192,6 +198,7 @@ class PageAllocator:
         slot's duplicate simply frees normally)."""
         n = min(len(hashes), int(self._n_held[slot]))
         row = self.page_table[slot, :n].tolist()   # one pull, not n
+        published = 0
         for j in range(n):
             h = hashes[j]
             if h in self._index:
@@ -199,6 +206,8 @@ class PageAllocator:
             page = row[j]
             self._index[h] = page
             self._page_hash[page] = h
+            published += 1
+        self.obs.on_page_event("publish", slot, published)
 
     def _take_page(self) -> int:
         """A fresh page: off the free list, else reclaim the LRU-oldest
@@ -207,6 +216,7 @@ class PageAllocator:
             return self._free.pop()
         page, _ = self._lru.popitem(last=False)
         del self._index[self._page_hash.pop(page)]
+        self.obs.on_page_event("evict", -1, 1)
         return page
 
     # -- mutation -----------------------------------------------------------
@@ -234,6 +244,8 @@ class PageAllocator:
             self._ref[page] = 1
         self._n_held[slot] = need
         self.version += 1
+        self.obs.on_page_event("grow", slot, short)
+        self.obs.on_pool(self.free_pages, len(self._lru))
 
     def shrink(self, slot: int, n_tokens: int) -> None:
         """Speculative rollback: drop the slot's tail pages beyond
@@ -258,6 +270,8 @@ class PageAllocator:
         self.page_table[slot, keep:held] = NULL_PAGE
         self._n_held[slot] = keep
         self.version += 1
+        self.obs.on_page_event("shrink", slot, held - keep)
+        self.obs.on_pool(self.free_pages, len(self._lru))
 
     def free(self, slot: int) -> None:
         """Retire a slot: drop one reference per held page and zero its
@@ -279,6 +293,8 @@ class PageAllocator:
         self._n_held[slot] = 0
         self._n_shared[slot] = 0
         self.version += 1
+        self.obs.on_page_event("free", slot, held)
+        self.obs.on_pool(self.free_pages, len(self._lru))
 
     # -- debug --------------------------------------------------------------
     def assert_invariants(self) -> None:

@@ -38,6 +38,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.obs.runtime import NULL_OBSERVER
+
 FREE = "free"
 PREFILL = "prefill"
 DECODE = "decode"
@@ -79,9 +81,13 @@ class SlotInfo:
 
 
 class Scheduler:
-    def __init__(self, n_slots: int, cfg: SchedulerConfig = SchedulerConfig()):
+    def __init__(self, n_slots: int, cfg: SchedulerConfig = SchedulerConfig(),
+                 observer=None):
         assert cfg.chunk >= 1
         self.cfg = cfg
+        # the injectable observability seam (repro.obs.runtime — jax-free
+        # like this module, so the RA004 purity contract holds transitively)
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self.slots = [SlotInfo() for _ in range(n_slots)]
         self.pending: list = []   # fresh requests, FIFO
         self.resume: list = []    # preempted requests — re-enter ahead of fresh
@@ -95,6 +101,8 @@ class Scheduler:
         (self.resume if front else self.pending).append(req)
         st = self._stats(req)
         st.setdefault("enqueue_step", self.step_count)
+        self.obs.on_enqueue(req.rid)
+        self.obs.on_queue_depth(len(self.resume) + len(self.pending))
 
     def next_queued(self):
         q = self.resume if self.resume else self.pending
@@ -102,7 +110,9 @@ class Scheduler:
 
     def pop_queued(self):
         q = self.resume if self.resume else self.pending
-        return q.pop(0)
+        req = q.pop(0)
+        self.obs.on_queue_depth(len(self.resume) + len(self.pending))
+        return req
 
     @property
     def has_queued(self) -> bool:
@@ -141,6 +151,7 @@ class Scheduler:
         st["admit_step"] = self.step_count
         if info.done:
             st["cached_tokens"] = st.get("cached_tokens", 0) + info.done
+        self.obs.on_admit(req.rid, slot, n_tokens, info.done)
         return info.state
 
     def mark_prefilled(self, slot: int) -> None:
@@ -156,6 +167,7 @@ class Scheduler:
         info.done += n
         self._stats(info.req)["prefill_tokens"] = \
             self._stats(info.req).get("prefill_tokens", 0) + n
+        self.obs.on_prefill_tokens(n)
         if info.done >= info.target:
             info.state = DECODE
             return True
@@ -185,6 +197,7 @@ class Scheduler:
         """Release + account a preemption; the caller re-enqueues (front)."""
         st = self._stats(self.slots[slot].req)
         st["preemptions"] = st.get("preemptions", 0) + 1
+        self.obs.on_preempt(self.slots[slot].req.rid, slot)
         return self.release(slot)
 
     def preempt_victim(self, exclude=()) -> Optional[int]:

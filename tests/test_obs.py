@@ -1,0 +1,428 @@
+"""Observability subsystem: metrics registry, tracer, and the Observer
+seam through the serving engine.
+
+Four layers of gate:
+
+  * **Instruments** — the log-bucket histogram's quantiles against a
+    numpy reference (within the documented ~12% bucket resolution),
+    counter/gauge/label plumbing, and a golden Prometheus text
+    exposition checked byte-for-byte plus through the format validator
+    (which itself is tested against deliberately malformed dumps).
+  * **Tracer** — Chrome/Perfetto ``trace_event`` schema validity,
+    balanced begin/end nesting, slot/rid attribution on instants, and
+    bounded-buffer overflow accounting.
+  * **Observer-through-engine** — observer-on output token-identical to
+    observer-off (observability must never change scheduling or
+    sampling), metric coverage on real runs: prefix-cache warm hits,
+    speculation counters agreeing with the engine's own ledger, census
+    export, TTFT/TPOT sample counts matching retirements.
+  * **Clock unification** — the serving stack has exactly ONE
+    ``time.*`` call site (``repro.obs.trace.now``), and every
+    ``Request.t_*`` mark falls inside a ``now()``-bracketed run.
+"""
+import functools
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.retrace_guard import census, retrace_guard
+from repro.configs.base import get_config, shrink
+from repro.core.famous import FamousConfig
+from repro.models import module, transformer
+from repro.obs.metrics import (LOG_BUCKETS, Histogram, MetricsRegistry,
+                               log_buckets, validate_prometheus_text)
+from repro.obs.runtime import NULL_OBSERVER, NullObserver, Observer
+from repro.obs.trace import Tracer, now
+from repro.serve.engine import Request, ServingEngine
+
+MAX_SEQ = 32
+CHUNK = 8
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg_params():
+    cfg = shrink(get_config("qwen2-7b"))
+    params = module.init_params(transformer.model_spec(cfg),
+                                jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _requests(cfg, n=6, seed=0, max_new=4, shared_head=0, rid0=0):
+    rng = np.random.default_rng(seed)
+    head = list(rng.integers(0, cfg.vocab_size, size=shared_head))
+    return [Request(rid=rid0 + i,
+                    tokens=head + list(rng.integers(
+                        0, cfg.vocab_size,
+                        size=int(rng.integers(2, 10)))),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _engine(observer=None, **kw):
+    cfg, params = _cfg_params()
+    return ServingEngine(params, cfg, FamousConfig(impl="xla"),
+                         n_slots=2, max_seq=MAX_SEQ, chunk=CHUNK,
+                         observer=observer, **kw)
+
+
+# ---------------------------------------------------------------------------
+# histogram vs numpy reference
+# ---------------------------------------------------------------------------
+
+
+def test_log_buckets_schema():
+    b = log_buckets(1e-2, 1e2, per_decade=10)
+    assert len(b) == 41
+    assert b[0] == pytest.approx(1e-2) and b[-1] == pytest.approx(1e2)
+    ratios = [b[i + 1] / b[i] for i in range(len(b) - 1)]
+    assert all(r == pytest.approx(10 ** 0.1) for r in ratios)
+    # the default schema really is 20/decade over ten decades
+    assert len(LOG_BUCKETS) == 201
+    assert LOG_BUCKETS[0] == pytest.approx(1e-5)
+    assert LOG_BUCKETS[-1] == pytest.approx(1e5)
+
+
+def test_histogram_quantiles_match_numpy_within_bucket_resolution():
+    rng = np.random.default_rng(3)
+    for scale in (1e-3, 1.0, 50.0):
+        values = rng.lognormal(mean=math.log(scale), sigma=1.0, size=2000)
+        h = Histogram.of(values)
+        assert h.count() == 2000
+        assert h.sum() == pytest.approx(values.sum())
+        for q in (5, 25, 50, 75, 95, 99):
+            ref = float(np.percentile(values, q))
+            got = h.percentile(q)
+            # one log bucket is a 10^(1/20) ~ 12.2% span; interpolation
+            # keeps the estimate inside the containing bucket
+            assert ref / 1.13 <= got <= ref * 1.13, (scale, q, ref, got)
+
+
+def test_histogram_edge_cases():
+    h = Histogram("h", "h")
+    assert math.isnan(h.quantile(0.5))
+    h.observe(1e9)              # beyond the last bound -> +Inf bucket
+    assert h.count() == 1
+    assert h.quantile(0.5) == pytest.approx(LOG_BUCKETS[-1])  # clamped
+    h2 = Histogram("h2", "h2", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 3.0):
+        h2.observe(v)
+    assert h2.count() == 4 and h2.sum() == pytest.approx(8.0)
+    assert 0.0 < h2.quantile(0.1) <= 1.0
+    assert 2.0 < h2.quantile(0.9) <= 4.0
+    # labelled cells are independent
+    h3 = Histogram("h3", "h3", ("phase",), buckets=(1.0,))
+    h3.observe(0.5, phase="a")
+    assert h3.count(phase="a") == 1 and h3.count(phase="b") == 0
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition: golden render + validator
+# ---------------------------------------------------------------------------
+
+
+def _golden_registry():
+    reg = MetricsRegistry()
+    reg.counter("t_reqs_total", "requests served", ("status",)) \
+        .inc(3, status='o"k')
+    reg.gauge("t_depth", "queue depth").set(1.5)
+    h = reg.histogram("t_lat_seconds", "latency", buckets=(1.0, 2.0))
+    h.observe(0.5)
+    h.observe(3.0)
+    return reg
+
+
+GOLDEN = """\
+# HELP t_depth queue depth
+# TYPE t_depth gauge
+t_depth 1.5
+# HELP t_lat_seconds latency
+# TYPE t_lat_seconds histogram
+t_lat_seconds_bucket{le="1"} 1
+t_lat_seconds_bucket{le="2"} 1
+t_lat_seconds_bucket{le="+Inf"} 2
+t_lat_seconds_sum 3.5
+t_lat_seconds_count 2
+# HELP t_reqs_total requests served
+# TYPE t_reqs_total counter
+t_reqs_total{status="o\\"k"} 3
+"""
+
+
+def test_prometheus_exposition_golden():
+    assert _golden_registry().prometheus_text() == GOLDEN
+
+
+def test_validator_accepts_and_counts_samples():
+    assert validate_prometheus_text(GOLDEN) == 7
+    # a full default-schema registry validates too
+    reg = MetricsRegistry()
+    h = reg.histogram("big_seconds", "h", ("phase",))
+    for i in range(50):
+        h.observe(10.0 ** (i % 7 - 3), phase="decode")
+    assert validate_prometheus_text(reg.prometheus_text()) \
+        == len(LOG_BUCKETS) + 3
+
+
+@pytest.mark.parametrize("bad", [
+    "no_type_line 1\n",
+    "# TYPE x wat\nx 1\n",
+    "# TYPE x counter\nx{unclosed 1\n",
+    "# TYPE x counter\nx notafloat\n",
+    # non-cumulative buckets
+    "# TYPE h histogram\n"
+    'h_bucket{le="1"} 5\nh_bucket{le="2"} 3\nh_bucket{le="+Inf"} 5\n'
+    "h_count 5\n",
+    # missing +Inf bucket
+    '# TYPE h histogram\nh_bucket{le="1"} 1\nh_count 1\n',
+    # _count disagrees with the +Inf bucket
+    "# TYPE h histogram\n"
+    'h_bucket{le="+Inf"} 2\nh_sum 1\nh_count 3\n',
+    # bucket without an le label
+    "# TYPE h histogram\nh_bucket 2\nh_count 2\n",
+])
+def test_validator_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        validate_prometheus_text(bad)
+
+
+def test_label_escaping_survives_the_validator():
+    reg = MetricsRegistry()
+    reg.counter("esc_total", "c", ("k",)).inc(1, k='a\\b"c\nd')
+    text = reg.prometheus_text()
+    assert validate_prometheus_text(text) == 1
+    assert '\\\\' in text and '\\"' in text and "\\n" in text
+
+
+def test_registry_idempotent_and_schema_checked():
+    reg = MetricsRegistry()
+    c1 = reg.counter("c_total", "help", ("a",))
+    assert reg.counter("c_total", "help", ("a",)) is c1
+    with pytest.raises(AssertionError):
+        reg.counter("c_total", "help", ("b",))   # different labels
+    with pytest.raises(AssertionError):
+        reg.gauge("c_total", "help", ("a",))     # different kind
+    c1.inc(2, a="x")
+    assert reg.snapshot() == {'c_total{a="x"}': 2.0}
+
+
+# ---------------------------------------------------------------------------
+# tracer: schema, nesting, attribution, bounded buffer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_schema_and_nesting():
+    tr = Tracer()
+    tr.begin("decode", step=1, slots=2)
+    tr.instant("admit", rid=7, slot=1)
+    assert not tr.balanced
+    tr.end("decode", step=1)
+    assert tr.balanced
+    doc = json.loads(json.dumps(tr.to_json()))   # JSON-serialisable
+    evs = doc["traceEvents"]
+    assert [e["ph"] for e in evs] == ["B", "i", "E"]
+    for e in evs:
+        assert set(e) >= {"name", "ph", "ts", "pid", "tid", "args"}
+        assert isinstance(e["ts"], float) and e["ts"] >= 0.0
+    assert evs[0]["ts"] <= evs[1]["ts"] <= evs[2]["ts"]
+    assert evs[1]["args"] == {"rid": 7, "slot": 1}   # attribution survives
+    assert evs[1]["s"] == "t"
+    assert doc["otherData"]["dropped"] == 0
+
+
+def test_tracer_bounded_buffer_drops_and_counts():
+    tr = Tracer(limit=3)
+    for i in range(5):
+        tr.instant("x", i=i)
+    assert len(tr.events) == 3 and tr.dropped == 2
+    assert tr.to_json()["otherData"]["dropped"] == 2
+
+
+def test_tracer_write(tmp_path):
+    tr = Tracer()
+    with_observer = Observer(trace=True)
+    assert with_observer.tracer is not None
+    tr.begin("p")
+    tr.end("p")
+    path = tmp_path / "trace.json"
+    tr.write(str(path))
+    assert len(json.loads(path.read_text())["traceEvents"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# observer through the engine
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _paired_runs():
+    """One observer-off and one observer-on engine over the same
+    workload; cached so every assertion below shares the two runs."""
+    cfg, _ = _cfg_params()
+    obs = Observer(trace=True)
+    off = _engine(observer=None, cache_kind="paged", page_size=8)
+    on = _engine(observer=obs, cache_kind="paged", page_size=8)
+    done_off = sorted(off.run(_requests(cfg)), key=lambda r: r.rid)
+    done_on = sorted(on.run(_requests(cfg)), key=lambda r: r.rid)
+    return done_off, done_on, obs, on
+
+
+def test_observer_on_is_token_identical_to_off():
+    done_off, done_on, _, _ = _paired_runs()
+    assert [r.out for r in done_on] == [r.out for r in done_off]
+    assert [r.error for r in done_on] == [r.error for r in done_off]
+
+
+def test_observer_metric_coverage():
+    _, done_on, obs, eng = _paired_runs()
+    m = obs.metrics
+    tok = sum(len(r.out) for r in done_on)
+    assert m.get("repro_tokens_generated_total").value() == tok
+    assert m.get("repro_requests_enqueued_total").value() == len(done_on)
+    assert m.get("repro_requests_admitted_total").value() >= len(done_on)
+    assert m.get("repro_requests_retired_total").value(status="ok") \
+        == len(done_on)
+    assert m.get("repro_engine_steps_total").value() > 0
+    # every retirement with a first token contributes one TTFT sample
+    assert m.get("repro_request_ttft_seconds").count() == len(done_on)
+    assert m.get("repro_step_phase_seconds").count(phase="decode") > 0
+    assert m.get("repro_step_phase_seconds").count(phase="prefill_chunk") > 0
+    # paged engine: pages were grown and freed back
+    assert m.get("repro_pages_total").value(op="grow") > 0
+    assert m.get("repro_pages_total").value(op="free") > 0
+    # the whole dump passes the format checker
+    assert validate_prometheus_text(obs.prometheus_text()) > 100
+
+
+def test_observer_trace_attribution_and_balance():
+    _, done_on, obs, _ = _paired_runs()
+    tr = obs.tracer
+    assert tr.balanced and tr.events
+    names = {e["name"] for e in tr.events}
+    assert {"admit", "retire", "decode", "prefill_chunk"} <= names
+    rids = {e["args"]["rid"] for e in tr.events if e["name"] == "retire"}
+    assert rids == {r.rid for r in done_on}
+    admits = [e for e in tr.events if e["name"] == "admit"]
+    assert all(e["args"]["slot"] in (0, 1) for e in admits)
+    # B/E pairs nest: depth never goes negative, ends at zero
+    depth = 0
+    for e in tr.events:
+        depth += {"B": 1, "E": -1}.get(e["ph"], 0)
+        assert depth >= 0
+    assert depth == 0
+    validate_json = json.dumps(obs.trace_json())
+    assert json.loads(validate_json)["traceEvents"]
+
+
+def test_observer_census_and_retrace_guard_sources():
+    _, _, obs, eng = _paired_runs()
+    assert obs.census() == {k: int(v) for k, v in eng.compilations.items()}
+    # retrace_guard reads the census through the Observer...
+    assert census(obs) == census(eng)
+    # ...and out of a flat registry snapshot
+    snap = obs.snapshot()
+    assert census(snap) == census(eng)
+    assert snap['repro_engine_compilations{exec="decode"}'] \
+        == eng.compilations["decode"]
+    # a guard over a warm engine, subject = the Observer, stays quiet
+    cfg, _ = _cfg_params()
+    with retrace_guard(obs, label="warm rerun via observer"):
+        eng.run(_requests(cfg, seed=5, rid0=100))
+    # a snapshot with no census gauges is an empty census, not garbage
+    assert census({"repro_tokens_generated_total": 5.0,
+                   'repro_pages_total{op="grow"}': 2.0}) == {}
+
+
+def test_observer_prefix_cache_hit_counters():
+    cfg, _ = _cfg_params()
+    obs = Observer()
+    eng = _engine(observer=obs, cache_kind="paged", page_size=8,
+                  prefix_cache=True)
+    shared = 16   # two full pages of shared head
+    eng.run(_requests(cfg, seed=11, shared_head=shared))
+    hits0 = obs.metrics.get("repro_prefix_lookups_total").value(result="hit")
+    eng.run(_requests(cfg, seed=12, shared_head=shared, rid0=50))
+    m = obs.metrics
+    assert m.get("repro_prefix_lookups_total").value(result="hit") > hits0
+    assert m.get("repro_prefix_pages_saved_total").value() \
+        == eng.prefix_hit_pages
+    assert m.get("repro_prefix_tokens_saved_total").value() \
+        == eng.prefix_hit_tokens
+    assert m.get("repro_pages_total").value(op="publish") > 0
+
+
+def test_observer_speculation_counters_match_engine_ledger():
+    cfg, _ = _cfg_params()
+    obs = Observer()
+    eng = _engine(observer=obs, speculative=True, draft_k=4)
+    rng = np.random.default_rng(2)
+    motif = list(map(int, rng.integers(0, cfg.vocab_size, 3)))
+    reqs = [Request(rid=i, tokens=(motif * 8)[:10], max_new=8)
+            for i in range(4)]
+    eng.run(reqs)
+    m = obs.metrics
+    assert m.get("repro_spec_verify_steps_total").value() == eng.spec_steps
+    assert m.get("repro_spec_drafted_total").value() == eng.spec_drafted
+    assert m.get("repro_spec_accepted_total").value() == eng.spec_accepted
+    assert eng.spec_drafted > 0
+    drafted = m.get("repro_spec_drafted_total").value()
+    accepted = m.get("repro_spec_accepted_total").value()
+    assert accepted / max(drafted, 1) == pytest.approx(eng.acceptance_rate)
+    lk = m.get("repro_draft_lookups_total")
+    assert lk.value(result="hit") + lk.value(result="miss") > 0
+    assert m.get("repro_draft_proposed_tokens_total").value() >= drafted
+
+
+def test_null_observer_is_inert_and_complete():
+    # NullObserver mirrors every public hook of Observer (a new hook
+    # must be added to both or engines crash with observer=None)
+    hooks = [n for n in dir(Observer) if n.startswith(("on_", "phase"))]
+    for n in hooks:
+        assert callable(getattr(NullObserver, n, None)), n
+    NULL_OBSERVER.on_step(queue_depth=1, occupied=2)
+    NULL_OBSERVER.on_tokens(5)
+    with NULL_OBSERVER.phase("decode", slots=1):
+        pass
+    assert NULL_OBSERVER.census() == {}
+
+
+# ---------------------------------------------------------------------------
+# clock unification
+# ---------------------------------------------------------------------------
+
+
+def test_serving_stack_has_one_clock_call_site():
+    """``repro.obs.trace.now`` is the serving stack's only ``time.*``
+    call site: request marks, trace timestamps, launcher and bench
+    timings all read one clock."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    offenders = []
+    scan = ["src/repro/serve", "src/repro/obs", "src/repro/launch/serve.py",
+            "benchmarks/serving_bench.py", "examples/serve_lm.py"]
+    for rel in scan:
+        path = os.path.join(root, rel)
+        files = ([os.path.join(path, f) for f in os.listdir(path)
+                  if f.endswith(".py")] if os.path.isdir(path) else [path])
+        for f in files:
+            if f.endswith(os.path.join("obs", "trace.py")):
+                continue
+            src = open(f, encoding="utf-8").read()
+            if "time.monotonic(" in src or "time.perf_counter(" in src \
+                    or "time.time(" in src:
+                offenders.append(os.path.relpath(f, root))
+    assert not offenders, f"direct clock calls outside obs.trace: {offenders}"
+
+
+def test_request_marks_come_from_the_shared_clock():
+    cfg, _ = _cfg_params()
+    eng = _engine()
+    t0 = now()
+    done = eng.run(_requests(cfg, n=3, seed=21))
+    t1 = now()
+    for r in done:
+        assert t0 <= r.t_submit <= r.t_first <= r.t_done <= t1, \
+            (r.rid, r.t_submit, r.t_first, r.t_done, t0, t1)
